@@ -1,0 +1,109 @@
+"""Discrete-event performance simulator for the paper's wall-clock
+experiments (Tables II/III, Fig. 4-right, Fig. 5).
+
+This container is CPU-only, so cluster wall-clock cannot be measured; the
+paper's speedup/straggler/load-balance phenomenology is reproduced with an
+event simulator whose per-batch compute and communication times are
+CALIBRATED from the roofline terms of the compiled dry-run (see
+``calibrate_blstm``): compute = dominant roofline term of one learner's
+per-batch program on its chips; communication = model bytes over the
+link bandwidth with the strategy's collective pattern.
+
+Strategies simulated:
+* sync allreduce (SC-PSGD): global barrier + ring allreduce per step
+* sync neighbor  (SD-PSGD): global barrier + left/right exchange per step
+* async ring     (AD-PSGD): no barrier; each learner loops gradient
+  compute and overlaps neighbor averaging (paper §IV-C) — a learner's step
+  rate is 1/max(t_comp, t_comm_overlap).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class ClusterSpec:
+    n_learners: int
+    t_comp: np.ndarray            # per-learner seconds per local batch
+    model_bytes: float
+    link_bw: float = 50e9         # per the roofline ICI constant
+    allreduce_eff: float = 1.0    # NCCL=1.0; 'OpenMPI' ~ 0.35 (paper Fig.4)
+
+    def t_allreduce(self) -> float:
+        L = self.n_learners
+        return 2 * self.model_bytes * (L - 1) / L / (
+            self.link_bw * self.allreduce_eff)
+
+    def t_neighbor(self) -> float:
+        # send/recv to both ring neighbors, full model each way
+        return 2 * self.model_bytes / self.link_bw
+
+
+def simulate_sync(spec: ClusterSpec, n_batches: int, *,
+                  neighbor_only: bool = False):
+    """Barrier per step: straggler-bound (paper Table II)."""
+    comm = spec.t_neighbor() if neighbor_only else spec.t_allreduce()
+    per_round = max(spec.t_comp) + comm
+    rounds = int(np.ceil(n_batches / spec.n_learners))
+    counts = np.full(spec.n_learners, rounds)
+    return per_round * rounds, counts
+
+
+def simulate_async(spec: ClusterSpec, n_batches: int):
+    """Event loop: each learner independently computes; communication is
+    overlapped, so a learner's cycle is max(compute, neighbor exchange).
+    Returns (makespan, batches per learner) — Fig. 5's distribution."""
+    t_comm = spec.t_neighbor()
+    step = np.maximum(spec.t_comp, t_comm)
+    heap = [(float(step[i]), i) for i in range(spec.n_learners)]
+    heapq.heapify(heap)
+    counts = np.zeros(spec.n_learners, np.int64)
+    t = 0.0
+    for _ in range(n_batches):
+        t, i = heapq.heappop(heap)
+        counts[i] += 1
+        heapq.heappush(heap, (t + float(step[i]), i))
+    return t, counts
+
+
+def simulate_hring(spec: ClusterSpec, n_batches: int, gpus_per_node: int,
+                   nvlink_bw: float = 150e9):
+    """H-ring (§V Table III): NCCL allreduce inside a node (super-learner),
+    AD-PSGD ring across nodes."""
+    n_nodes = spec.n_learners // gpus_per_node
+    t_local = (2 * spec.model_bytes * (gpus_per_node - 1)
+               / gpus_per_node / nvlink_bw)
+    node_comp = spec.t_comp.reshape(n_nodes, gpus_per_node).max(1) + t_local
+    node_spec = ClusterSpec(n_nodes, node_comp, spec.model_bytes,
+                            spec.link_bw)
+    # each node-step consumes gpus_per_node local batches
+    makespan, counts = simulate_async(node_spec,
+                                      n_batches // gpus_per_node)
+    return makespan, counts * gpus_per_node
+
+
+# ---------------------------------------------------------------------------
+# calibration from the repo's own artifacts
+# ---------------------------------------------------------------------------
+
+def calibrate_blstm(batch_per_learner: int = 160, unroll: int = 21):
+    """Per-batch compute time of the paper's BLSTM on one v5e chip, from
+    the model's analytic FLOPs/bytes and roofline constants; model bytes
+    from the real ParamSpec tree (≈165MB, matching paper Table I)."""
+    from repro.analysis.params import count_params
+    from repro.analysis.roofline import HW
+    from repro.configs import get_arch
+    from repro.models import build_model
+
+    cfg = get_arch("swb2000-blstm")
+    n_params = count_params(build_model(cfg).param_specs())
+    model_bytes = n_params * 4.0                      # paper stores fp32
+    tokens = batch_per_learner * unroll
+    flops = 6.0 * n_params * tokens
+    t_compute = flops / HW.peak_flops_bf16
+    # LSTM steps are latency/memory bound: weights re-read per unroll step
+    t_memory = (2 * n_params * 2 * unroll) / HW.hbm_bw
+    return max(t_compute, t_memory), model_bytes, n_params

@@ -1,0 +1,101 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV (value is seconds, speedup-x, or the
+table's native unit; see each bench's docstring).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def all_benches():
+    from benchmarks import paper_tables as T
+
+    return [
+        ("table1", T.bench_table1),
+        ("fig4_convergence", T.bench_fig4_convergence),
+        ("fig4_speedup", T.bench_fig4_speedup),
+        ("table2_straggler", T.bench_table2_straggler),
+        ("table3_hring", T.bench_table3_hring),
+        ("fig5_load_balance", T.bench_fig5_load_balance),
+        ("compression", T.bench_compression),
+        ("kernel_microbench", _kernel_microbench),
+    ]
+
+
+def _kernel_microbench():
+    """us/call of the pure-JAX compute paths on CPU (reduced shapes) —
+    relative regression tracking, not TPU numbers."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.models.attention import attn_seq
+    from repro.models.ssm import ssd_chunked
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    q = jax.random.normal(key, (2, 512, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (2, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (2, 512, 2, 64), jnp.float32)
+    for name, fn in (
+        ("attn_naive_ref", jax.jit(lambda: ref.attention_ref(q, k, v))),
+        ("attn_chunked", jax.jit(lambda: attn_seq(q, k, v, causal=True,
+                                                  q_chunk=128))),
+    ):
+        fn()  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn())
+        rows.append((f"kernels/{name}", (time.perf_counter() - t0) / 5 * 1e6,
+                     "us/call cpu"))
+
+    x = jax.random.normal(key, (2, 1024, 8, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 1024, 8)))
+    A = -jnp.exp(jax.random.normal(key, (8,)) * 0.5)
+    Bm = jax.random.normal(key, (2, 1024, 8, 32), jnp.float32)
+    Cm = jax.random.normal(key, (2, 1024, 8, 32), jnp.float32)
+    for name, fn in (
+        ("ssd_sequential_ref", jax.jit(lambda: ref.ssd_ref(x, dt, A, Bm,
+                                                           Cm)[0])),
+        ("ssd_chunked", jax.jit(lambda: ssd_chunked(x, dt, A, Bm, Cm,
+                                                    256)[0])),
+    ):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn())
+        rows.append((f"kernels/{name}", (time.perf_counter() - t0) / 5 * 1e6,
+                     "us/call cpu"))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+
+    print("name,value,derived")
+    failures = 0
+    for name, fn in all_benches():
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row_name, val, derived in fn():
+                print(f"{row_name},{val:.6g},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving example: continuous-batching decode over the model zoo
+(wraps repro.launch.serve; see that module for the slot/cache mechanics).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-370m
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--arch", "smollm-360m", "--requests", "6",
+                          "--slots", "3", "--max-new", "12"])

@@ -1,0 +1,56 @@
+"""Fig. 4-style strategy comparison on one model: heldout loss + consensus
+trajectories of SC/SD/AD-PSGD + BMUF, same data order and LR.
+
+  PYTHONPATH=src python examples/strategy_comparison.py [--arch smollm-360m]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import strategies as ST
+from repro.data import make_dataset
+from repro.models import build_model
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant
+from repro.sharding import init_spec_tree
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="swb2000-blstm")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--learners", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.3)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    L = args.learners
+    seq = 21 if cfg.family == "lstm" else 64
+    ds = make_dataset(cfg, seq_len=seq, batch=4 * L, seed=0)
+    heldout = [ds.batch_at(50_000 + i) for i in range(4)]
+
+    print("strategy,step,heldout_loss,consensus")
+    for name in ("sc_psgd_replicated", "sd_psgd", "ad_psgd", "bmuf",
+                 "ad_psgd_q8", "ad_psgd_exp"):
+        strat = ST.get_strategy(name)
+        params = ST.stack_for_learners(
+            init_spec_tree(model.param_specs(), jax.random.PRNGKey(0)), L)
+        state = ST.init_state(strat, params, sgd())
+        step = jax.jit(ST.make_train_step(strat, model.loss_fn, sgd(),
+                                          constant(args.lr), n_learners=L,
+                                          with_consensus=True))
+        for k in range(args.steps):
+            state, m = step(state, ds.batch_at(k))
+            if k % 25 == 0 or k == args.steps - 1:
+                avg = ST.average_learners(state["params"])
+                hl = float(np.mean([float(model.loss_fn(avg, hb))
+                                    for hb in heldout]))
+                print(f"{name},{k},{hl:.4f},{float(m['consensus']):.3e}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.analysis.hlo import analyze_hlo, HloStats  # noqa: F401
+from repro.analysis.roofline import roofline_terms, HW  # noqa: F401

@@ -1,0 +1,288 @@
+"""Post-compile HLO analyzer: per-step FLOPs / HBM bytes / collective bytes
+with correct while-loop trip-count attribution.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any scanned
+program (layers, microbatches, q-chunks) is undercounted by the trip
+count.  XLA:CPU conveniently records ``backend_config={"known_trip_count"
+:{"n": ...}}`` on while ops after optimization, so we walk the call graph
+(fusion ``calls=``, while ``body=/condition=``, ``to_apply=``) and multiply
+through.  Validated against a fully-unrolled compile of the same program
+(tests/test_hlo_analysis.py).
+
+All numbers are PER DEVICE (the SPMD module is per-device); multiply by
+chip count for cluster totals.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+def _parse_op_line(line):
+    """'%name = TYPE opcode(args), attrs' -> (name, type_str, opcode, rest)
+    with balanced-paren handling of tuple types (which may contain '=' in
+    /*index=N*/ comments and '{...}' layouts)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    eq = s.find(" = ")
+    if eq < 0 or not s.startswith("%"):
+        return None
+    name = s[1:eq]
+    rhs = s[eq + 3:]
+    if rhs.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str = rhs[:i + 1]
+        rem = rhs[i + 1:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str = rhs[:sp]
+        rem = rhs[sp + 1:]
+    par = rem.find("(")
+    if par < 0:
+        return None
+    opcode = rem[:par].strip()
+    rest = rem[par + 1:]
+    if not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    return name, type_str, opcode, rest
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_shapes(type_str):
+    """'(f32[2,3], bf16[4])' or 'f32[2,3]{1,0}' -> [(dtype, [dims])]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(x) for x in dims.split(",")] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes):
+    total = 0
+    for dt, dims in shapes:
+        n = _DTYPE_BYTES.get(dt, 0)
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _nelems(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+# HBM-traffic model: count operand+result bytes only for ops that would
+# stay materialization boundaries under TPU fusion; bare elementwise /
+# shape ops are assumed fused into a neighbor (calibration notes in
+# DESIGN.md §Roofline-methodology).
+_COUNT_BYTES_OPS = {
+    "fusion", "dot", "convolution", "dynamic-update-slice", "dynamic-slice",
+    "copy", "transpose", "reduce", "reduce-window", "scatter", "gather",
+    "sort", "pad", "concatenate", "slice", "reverse", "cholesky",
+    "triangular-solve", "rng", "rng-bit-generator",
+} | set(COLLECTIVES)
+
+
+@dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=dict)
+    # (kind, callee, trip) edges
+    edges: list = field(default_factory=list)
+
+
+@dataclass
+class HloStats:
+    """Per-device totals for one compiled module."""
+
+    flops: float
+    bytes: float
+    collectives: dict          # type -> {"bytes": b, "count": n}
+    n_while: int
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+    def to_json(self):
+        return {"flops": self.flops, "bytes": self.bytes,
+                "collectives": self.collectives,
+                "collective_bytes": self.collective_bytes,
+                "n_while": self.n_while}
+
+
+def _split_computations(text: str):
+    comps, cur, name = {}, None, None
+    for line in text.splitlines():
+        if cur is None:
+            # computation headers start at column 0 and end with '{'
+            if line[:1] not in (" ", "\t", "") and line.rstrip().endswith("{"):
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line)
+                if m and "HloModule" not in line:
+                    name = m.group(1)
+                    cur = []
+                    comps[name] = (cur, line.startswith("ENTRY"))
+        else:
+            if line.startswith("}") or line.strip() == "}":
+                cur = None
+            else:
+                cur.append(line)
+    return comps
+
+
+def analyze_hlo(text: str) -> HloStats:
+    raw = _split_computations(text)
+    comps: dict[str, _Comp] = {}
+    entry_name = None
+    n_while = 0
+
+    for name, (lines, is_entry) in raw.items():
+        c = _Comp(name)
+        symbols = {}
+        if is_entry:
+            entry_name = name
+        for line in lines:
+            m = _parse_op_line(line)
+            if not m:
+                continue
+            res_name, type_str, opcode, rest = m
+            shapes = _parse_shapes(type_str)
+            symbols[res_name] = shapes
+            # ---- flops: dot ops (2 * out_elems * contracted size)
+            if opcode == "dot":
+                out_elems = sum(_nelems(d) for _, d in shapes)
+                cm = _CONTRACT_RE.search(rest)
+                contract = 1
+                if cm:
+                    idxs = [int(x) for x in cm.group(1).split(",") if x]
+                    lhs = _OPERAND_RE.search(rest)
+                    if lhs and lhs.group(1) in symbols:
+                        ldims = symbols[lhs.group(1)][0][1]
+                        for i in idxs:
+                            if i < len(ldims):
+                                contract *= ldims[i]
+                c.flops += 2.0 * out_elems * contract
+            # ---- collectives
+            if opcode in COLLECTIVES:
+                ops_bytes = 0
+                # operand shapes from local symbol table
+                arg_str = rest.split(")", 1)[0]
+                for om in _OPERAND_RE.finditer(arg_str):
+                    if om.group(1) in symbols and om.group(1) != res_name:
+                        ops_bytes += _nbytes(symbols[om.group(1)])
+                if ops_bytes == 0:  # fall back to result size
+                    ops_bytes = _nbytes(shapes)
+                d = c.coll.setdefault(opcode, {"bytes": 0.0, "count": 0})
+                d["bytes"] += ops_bytes
+                d["count"] += 1
+            # ---- HBM-ish bytes: fusion/dot/collective boundaries
+            if opcode in _COUNT_BYTES_OPS:
+                if opcode == "dynamic-slice":
+                    # hardware reads only the slice, not the full operand
+                    b = 2 * _nbytes(shapes)
+                elif opcode == "dynamic-update-slice":
+                    # in-place on TPU: read+write of the UPDATE region only
+                    # (update operand = 2nd %ref in the arg list)
+                    arg_str = rest.split(")", 1)[0]
+                    refs = [om.group(1)
+                            for om in _OPERAND_RE.finditer(arg_str)]
+                    upd = (_nbytes(symbols[refs[1]])
+                           if len(refs) > 1 and refs[1] in symbols
+                           else _nbytes(shapes))
+                    b = 2 * upd
+                else:
+                    b = _nbytes(shapes)
+                    arg_str = rest.split(")", 1)[0]
+                    for om in _OPERAND_RE.finditer(arg_str):
+                        if om.group(1) in symbols and om.group(1) != res_name:
+                            b += _nbytes(symbols[om.group(1)])
+                c.bytes += b
+            # ---- call edges
+            if opcode == "fusion":
+                cm = _CALLS_RE.search(rest)
+                if cm:
+                    c.edges.append(("call", cm.group(1), 1))
+            elif opcode == "while":
+                n_while += 1
+                trip = 1
+                tm = _TRIP_RE.search(rest)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _BODY_RE.search(rest)
+                if bm:
+                    c.edges.append(("call", bm.group(1), trip))
+                cnd = _COND_RE.search(rest)
+                if cnd:
+                    c.edges.append(("call", cnd.group(1), trip + 1))
+            elif opcode in ("call", "reduce", "reduce-window", "scatter",
+                            "select-and-scatter", "sort", "map", "all-reduce",
+                            "reduce-scatter"):
+                am = _APPLY_RE.search(rest)
+                if am:
+                    c.edges.append(("call", am.group(1), 1))
+            elif opcode == "conditional":
+                bm = _BRANCH_RE.search(rest)
+                if bm:
+                    branches = _OPERAND_RE.findall(bm.group(1))
+                    for b in branches:   # upper bound: all branches
+                        c.edges.append(("call", b, 1))
+        comps[name] = c
+
+    memo = {}
+
+    def total(name):
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, {})  # cycle guard
+        fl, by, co = c.flops, c.bytes, {k: dict(v) for k, v in c.coll.items()}
+        for _, callee, trip in c.edges:
+            cf, cb, cc = total(callee)
+            fl += trip * cf
+            by += trip * cb
+            for k, v in cc.items():
+                d = co.setdefault(k, {"bytes": 0.0, "count": 0})
+                d["bytes"] += trip * v["bytes"]
+                d["count"] += trip * v["count"]
+        memo[name] = (fl, by, co)
+        return memo[name]
+
+    fl, by, co = total(entry_name) if entry_name else (0.0, 0.0, {})
+    return HloStats(flops=fl, bytes=by, collectives=co, n_while=n_while)

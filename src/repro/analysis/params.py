@@ -1,0 +1,38 @@
+"""Parameter counting (total / active) from ParamSpec trees."""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding import ParamSpec
+
+
+def _count(ps: ParamSpec) -> int:
+    n = 1
+    for d in ps.shape:
+        n *= d
+    return n
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(_count(ps) for ps in leaves)
+
+
+def count_active_params(cfg, spec_tree) -> int:
+    """MoE: routed-expert tensors count at top_k/num_experts (6*N_active*D
+    convention for the roofline MODEL_FLOPS)."""
+    paths = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))[0]
+    total = 0.0
+    frac = (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 1.0
+    for path, ps in paths:
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        n = _count(ps)
+        if "embed" in keys or "softmax_w" in keys:
+            continue  # 6ND convention: non-embedding params
+        if cfg.moe and ps.axes and ps.axes[0] == "experts":
+            total += n * frac  # routed expert weight (E, ...)
+        else:
+            total += n
+    return int(total)

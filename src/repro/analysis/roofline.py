@@ -1,0 +1,52 @@
+"""Roofline terms for the TPU v5e target (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs        / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes        / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO quantities come from the per-device HLO analysis (trip-count-correct,
+see ``repro.analysis.hlo``); per-device * chips = cluster totals, so the
+per-chip time terms below divide out to the per-device numbers directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12     # per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link
+    hbm_per_chip: float = 16e9
+
+
+HW = Hardware()
+
+
+def model_flops(cfg, shape, n_params_active: float, mode: str) -> float:
+    """Analytic MODEL_FLOPS = 6*N*D (train) / 2*N*D (forward-only), global."""
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            tokens = shape.global_batch * shape.seq_len  # enc+dec halves
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape.global_batch
+
+
+def roofline_terms(per_device: dict, *, chips: int, hw: Hardware = HW):
+    """per_device: {'flops','bytes','collective_bytes'} from HloStats."""
+    compute = per_device["flops"] / hw.peak_flops_bf16
+    memory = per_device["bytes"] / hw.hbm_bw
+    collective = per_device["collective_bytes"] / hw.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant.replace("_s", "")
+    terms["bound_s"] = terms[dominant]
+    return terms

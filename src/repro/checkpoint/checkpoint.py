@@ -1,0 +1,90 @@
+"""Msgpack+npz checkpointing for arbitrary train-state pytrees.
+
+Layout:  <dir>/step_<n>/tree.msgpack (structure + small leaves metadata)
+         <dir>/step_<n>/arrays.npz   (tensor payloads)
+Writes are atomic (tmp dir + rename); ``keep`` bounds retained steps.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree.flatten(state)
+    return leaves, treedef
+
+
+def save(directory: str, step: int, state, *, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves, treedef = _flatten(state)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    meta = {
+        "step": int(step),
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "shapes": [list(a.shape) for a in arrays.values()],
+    }
+    tmp = os.path.join(directory, f".tmp_step_{step}")
+    final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "tree.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+    # npz can't hold bfloat16 — view as uint16 and restore from dtype meta
+    packed = {
+        k: (a.view(np.uint16) if a.dtype.name == "bfloat16" else a)
+        for k, a in arrays.items()
+    }
+    np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    steps = sorted(latest_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
+    return final
+
+
+def latest_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    return [int(d.split("_", 1)[1]) for d in os.listdir(directory)
+            if d.startswith("step_")]
+
+
+def latest_step(directory: str):
+    steps = latest_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore(directory: str, state_like, step: int = None):
+    """Restore into the structure of ``state_like`` (shape/dtype checked)."""
+    import jax.numpy as jnp
+
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "tree.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(state_like)
+    assert meta["n_leaves"] == len(leaves), "tree structure mismatch"
+    out = []
+    for i, ref in enumerate(leaves):
+        a = data[f"leaf_{i}"]
+        dt = meta["dtypes"][i]
+        if dt == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        expect = tuple(np.shape(ref))
+        assert tuple(a.shape) == expect, (i, a.shape, expect)
+        out.append(jnp.asarray(a))
+    return jax.tree.unflatten(treedef, out), step

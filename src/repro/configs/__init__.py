@@ -1,0 +1,33 @@
+"""Assigned-architecture registry.
+
+Importing this package registers every ``--arch`` id.  Each module carries
+the exact assigned configuration with its source citation.
+"""
+from repro.configs.base import (  # noqa: F401
+    ARCH_REGISTRY,
+    SHAPE_REGISTRY,
+    ArchConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    get_arch,
+    get_shape,
+)
+
+# one module per assigned architecture (+ the paper's own model)
+from repro.configs import (  # noqa: F401
+    command_r_35b,
+    granite_moe_3b_a800m,
+    hymba_1_5b,
+    internvl2_2b,
+    llama4_scout_17b_a16e,
+    mamba2_370m,
+    phi3_medium_14b,
+    smollm_360m,
+    stablelm_12b,
+    swb2000_blstm,
+    whisper_large_v3,
+)
+
+ALL_ARCHS = tuple(sorted(ARCH_REGISTRY))
+ASSIGNED_ARCHS = tuple(a for a in ALL_ARCHS if a != "swb2000-blstm")

@@ -1,0 +1,28 @@
+"""command-r-35b [dense] — GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01]."""
+from repro.configs.base import ArchConfig, register
+
+COMMAND_R_35B = register(
+    ArchConfig(
+        name="command-r-35b",
+        family="dense",
+        n_layers=40,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=22528,
+        vocab=256000,
+        head_dim=128,
+        rope_theta=10_000.0,
+        norm="layernorm",
+        act="swiglu",
+        use_bias=False,
+        tie_embeddings=True,
+        citation="hf:CohereForAI/c4ai-command-r-v01 model card",
+        window_for_long=8192,
+        # 35B replicated per learner does not leave room for an extra stale
+        # copy; SD-PSGD needs no AD-PSGD staleness buffer (DESIGN.md).
+        train_strategy="sd_psgd",
+        n_learners=16,
+        microbatches=8,
+    )
+)

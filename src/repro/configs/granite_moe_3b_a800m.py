@@ -1,0 +1,40 @@
+"""granite-moe-3b-a800m [moe] — 40 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base family].
+
+Tiny experts (d_ff=512) with a wide top-k: the dispatch overhead of
+capacity routing dwarfs the expert matmuls, so the default router_impl is
+"dense" (compute all 40 experts, mask to top-8) which is exact and
+MXU-friendly at this size — see DESIGN.md §MoE.
+"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+GRANITE_MOE_3B = register(
+    ArchConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        n_layers=32,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=8,
+        d_ff=512,
+        vocab=49155,
+        head_dim=64,
+        rope_theta=10_000.0,
+        norm="rmsnorm",
+        act="swiglu",
+        tie_embeddings=True,
+        citation="hf:ibm-granite/granite-3.0-3b-a800m-base model card",
+        moe=MoEConfig(
+            num_experts=40,
+            top_k=8,
+            d_ff_expert=512,
+            capacity_factor=1.25,
+            router_impl="dense",
+            router_group=2048,
+        ),
+        window_for_long=8192,
+        train_strategy="ad_psgd",
+        n_learners=16,
+        microbatches=4,
+    )
+)

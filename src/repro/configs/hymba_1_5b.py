@@ -1,0 +1,41 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads in every layer
+[arXiv:2411.13676].
+
+Hymba fuses attention heads and SSM heads inside one block (outputs are
+independently normalized and averaged).  Most layers use sliding-window
+attention; first/middle/last keep global attention — which is what makes
+``long_500k`` feasible natively.
+"""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+HYMBA_1_5B = register(
+    ArchConfig(
+        name="hymba-1.5b",
+        family="hybrid",
+        n_layers=32,
+        d_model=1600,
+        n_heads=25,
+        n_kv_heads=5,
+        d_ff=5504,
+        vocab=32001,
+        head_dim=64,
+        rope_theta=10_000.0,
+        norm="rmsnorm",
+        act="swiglu",
+        tie_embeddings=True,
+        citation="arXiv:2411.13676 (Hymba)",
+        ssm=SSMConfig(
+            state_dim=16,
+            head_dim=64,
+            expand=2,
+            n_groups=1,
+            conv_width=4,
+            chunk=256,
+        ),
+        window=1024,
+        global_attn_layers=(0, 15, 31),
+        train_strategy="ad_psgd",
+        n_learners=16,
+        microbatches=2,
+    )
+)

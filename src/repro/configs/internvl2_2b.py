@@ -1,0 +1,32 @@
+"""internvl2-2b [vlm] — InternViT + InternLM2 [arXiv:2404.16821].
+
+Only the language/decoder backbone (InternLM2-1.8B shape) is implemented;
+the InternViT vision encoder + MLP projector are a STUB whose output patch
+embeddings are provided by ``input_specs`` (per the assignment carve-out).
+"""
+from repro.configs.base import ArchConfig, register
+
+INTERNVL2_2B = register(
+    ArchConfig(
+        name="internvl2-2b",
+        family="vlm",
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=92553,
+        head_dim=128,
+        rope_theta=10_000.0,
+        norm="rmsnorm",
+        act="swiglu",
+        tie_embeddings=True,
+        citation="arXiv:2404.16821 (InternVL2); LM backbone InternLM2-1.8B",
+        frontend="vision",
+        vlm_patch_frac=0.25,
+        window_for_long=8192,
+        train_strategy="ad_psgd",
+        n_learners=16,
+        microbatches=4,
+    )
+)

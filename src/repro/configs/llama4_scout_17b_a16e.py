@@ -1,0 +1,49 @@
+"""llama4-scout-17b-a16e [moe] — MoE 16e top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E].
+
+~109B total / ~17B active parameters.  A full per-learner replica does not
+fit 16 chips of HBM, so training uses the paper's allreduce-equivalent
+SC-PSGD (Eq.13 of the paper) with expert sharding over the data axis and
+FSDP for the dense trunk — see DESIGN.md §Arch-applicability.
+
+Llama-4 interleaves chunked (local) attention with a few global-attention
+layers (iRoPE); we model that with window=8192 and periodic global layers,
+which also makes ``long_500k`` natively sub-quadratic for this arch.
+"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+LLAMA4_SCOUT = register(
+    ArchConfig(
+        name="llama4-scout-17b-a16e",
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=202048,
+        head_dim=128,
+        rope_theta=500_000.0,
+        norm="rmsnorm",
+        act="swiglu",
+        tie_embeddings=True,
+        citation="hf:meta-llama/Llama-4-Scout-17B-16E model card",
+        moe=MoEConfig(
+            num_experts=16,
+            top_k=1,
+            d_ff_expert=8192,
+            shared_expert=True,
+            shared_d_ff=8192,
+            capacity_factor=1.25,
+            router_impl="dispatch",
+            router_group=4096,
+        ),
+        window=8192,
+        global_attn_layers=(0, 12, 24, 36),
+        train_strategy="sc_psgd",
+        n_learners=1,
+        fsdp=True,
+        expert_axis="data",
+        microbatches=8,
+    )
+)

@@ -1,0 +1,31 @@
+"""mamba2-370m [ssm] — SSD (state-space duality), attention-free
+[arXiv:2405.21060]."""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+MAMBA2_370M = register(
+    ArchConfig(
+        name="mamba2-370m",
+        family="ssm",
+        n_layers=48,
+        d_model=1024,
+        n_heads=0,            # attention-free
+        n_kv_heads=0,
+        d_ff=0,               # no separate FFN; mamba2 block carries the MLP
+        vocab=50280,
+        head_dim=0,
+        norm="rmsnorm",
+        tie_embeddings=True,
+        citation="arXiv:2405.21060 (Mamba-2 / SSD)",
+        ssm=SSMConfig(
+            state_dim=128,
+            head_dim=64,
+            expand=2,          # d_inner = 2048, n_ssm_heads = 32
+            n_groups=1,
+            conv_width=4,
+            chunk=256,
+        ),
+        train_strategy="ad_psgd",
+        n_learners=16,
+        microbatches=2,
+    )
+)

@@ -1,0 +1,28 @@
+"""phi3-medium-14b [dense] — RoPE SwiGLU GQA [arXiv:2404.14219]."""
+from repro.configs.base import ArchConfig, register
+
+PHI3_MEDIUM_14B = register(
+    ArchConfig(
+        name="phi3-medium-14b",
+        family="dense",
+        n_layers=40,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=10,
+        d_ff=17920,
+        vocab=100352,
+        head_dim=128,
+        rope_theta=10_000.0,
+        norm="rmsnorm",
+        act="swiglu",
+        tie_embeddings=True,
+        citation="arXiv:2404.14219 (Phi-3 technical report)",
+        # full attention -> long_500k runs as the documented sliding-window
+        # variant (window_for_long), see DESIGN.md §Arch-applicability.
+        window=0,
+        window_for_long=8192,
+        train_strategy="ad_psgd",
+        n_learners=16,
+        microbatches=8,
+    )
+)

@@ -1,0 +1,25 @@
+"""smollm-360m [dense] — llama-arch small [hf:HuggingFaceTB/SmolLM-135M]."""
+from repro.configs.base import ArchConfig, register
+
+SMOLLM_360M = register(
+    ArchConfig(
+        name="smollm-360m",
+        family="dense",
+        n_layers=32,
+        d_model=960,
+        n_heads=15,
+        n_kv_heads=5,
+        d_ff=2560,
+        vocab=49152,
+        head_dim=64,
+        rope_theta=10_000.0,
+        norm="rmsnorm",
+        act="swiglu",
+        tie_embeddings=True,
+        citation="hf:HuggingFaceTB/SmolLM-135M (llama architecture family)",
+        window_for_long=8192,
+        train_strategy="ad_psgd",
+        n_learners=16,
+        microbatches=2,
+    )
+)

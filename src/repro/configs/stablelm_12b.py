@@ -1,0 +1,26 @@
+"""stablelm-12b [dense] — [hf:stabilityai/stablelm-2-1_6b family]."""
+from repro.configs.base import ArchConfig, register
+
+STABLELM_12B = register(
+    ArchConfig(
+        name="stablelm-12b",
+        family="dense",
+        n_layers=40,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=13824,
+        vocab=100352,
+        head_dim=160,
+        rope_theta=10_000.0,
+        norm="layernorm",
+        act="swiglu",
+        use_bias=False,
+        tie_embeddings=False,
+        citation="hf:stabilityai/stablelm-2-12b model card",
+        window_for_long=8192,
+        train_strategy="sd_psgd",
+        n_learners=16,
+        microbatches=8,
+    )
+)

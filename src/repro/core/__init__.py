@@ -1,0 +1,22 @@
+"""The paper's primary contribution: decentralized/asynchronous data-parallel
+SGD strategies expressed in the mixing-matrix formalism of Eq. 14."""
+from repro.core.mixing import (  # noqa: F401
+    get_mixer,
+    is_doubly_stochastic,
+    mix_matrix,
+    mix_ring,
+    mix_uniform,
+    ring_matrix,
+    uniform_matrix,
+)
+from repro.core.strategies import (  # noqa: F401
+    STRATEGIES,
+    Strategy,
+    average_learners,
+    consensus_distance,
+    get_strategy,
+    init_state,
+    make_train_step,
+    split_learner_batch,
+    stack_for_learners,
+)

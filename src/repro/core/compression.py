@@ -1,0 +1,91 @@
+"""Communication compression for decentralized mixing (beyond-paper,
+anchored in the paper's §IV-D survey of 1-bit SGD [Seide'14] / QSGD
+[Alistarh'17] / sparsification [Aji'17]).
+
+``quantize_int8`` is a per-tensor symmetric linear quantizer with an f32
+scale; applied to the *neighbor payloads* of ring mixing it halves the
+collective-permute wire bytes vs bf16 (4x vs the f32 baseline wire) at the
+cost of <=1/254 relative rounding error per round.  Because mixing is a
+CONTRACTION toward consensus, the quantization noise stays bounded (it is
+re-averaged every round) — validated in tests/test_compression.py, and the
+end-to-end convergence test shows no measurable loss-curve difference at
+int8 on the toy problem.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """x (any float) -> (int8 payload, f32 scale). Symmetric, per-tensor."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def mix_ring_q8(params):
+    """Ring (T_1) mixing with int8 neighbor payloads.
+
+    Each learner sends q8(w_l) to both ring neighbors; the local replica
+    stays full precision: w' = (w + deq(left) + deq(right)) / 3.
+    The permute moves int8 + one f32 scalar — 2x less wire than bf16.
+    """
+    def one(w):
+        L = w.shape[0]
+        if L == 1:
+            return w
+        q, scale = quantize_int8(w)
+        # scales are per-learner-tensor: roll them alongside the payload
+        def neighbor(shift):
+            qn = jnp.roll(q, shift, axis=0)
+            return dequantize_int8(qn, scale)  # per-tensor scale shared
+
+        wf = w.astype(jnp.float32)
+        if L == 2:
+            mixed = (2 * wf + neighbor(1)) / 3.0
+        else:
+            mixed = (wf + neighbor(1) + neighbor(-1)) / 3.0
+        return mixed.astype(w.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def make_exp_mixer(n_learners: int):
+    """One-peer exponential-graph gossip [Assran'19/Ying'21]: at step k each
+    learner averages with the peer 2^(k mod log2 L) hops away.
+
+    For L = 2^m this reaches EXACT consensus every m rounds (hypercube
+    gossip) — strictly faster mixing than the paper's T_1 ring at the same
+    per-step wire cost (ONE permute instead of two).  Time-varying T_k are
+    each doubly stochastic, so the Eq. 14 analysis still applies.
+    """
+    import numpy as np
+
+    L = n_learners
+    m = max(int(np.log2(L)), 1)
+    assert 2 ** m == L or L == 1, "exponential graph wants power-of-2 learners"
+
+    def mix(params, step):
+        if L == 1:
+            return params
+        k = step % m
+
+        def one(w):
+            wf = w.astype(jnp.float32)
+            branches = [
+                (lambda shift: lambda ww=wf, s=shift:
+                 (ww + jnp.roll(ww, s, axis=0)) / 2.0)(2 ** i)
+                for i in range(m)
+            ]
+            return jax.lax.switch(k, branches).astype(w.dtype)
+
+        return jax.tree.map(one, params)
+
+    return mix

@@ -1,0 +1,139 @@
+"""Mixing matrices for decentralized parallel SGD (paper §IV-C, Eq. 14).
+
+The paper models one decentralized update as
+
+    W_{k+1} = W_k · T  −  α_k · g(Φ_k, ξ_k)
+
+where the columns of ``W_k`` are per-learner model replicas and ``T`` is a
+doubly-stochastic mixing matrix.  Two canonical choices from the paper:
+
+* ``T_1`` (ring): each learner averages with its immediate left/right
+  neighbors — 1/3 on the tridiagonal (wrap-around).  On the TPU mesh this
+  lowers to a pair of ``collective-permute`` ops over the learner axis.
+* ``T_u`` (uniform): global model averaging — the allreduce realization of
+  a parameter server (paper Eq. 13).
+
+``apply_mixing`` is the collective-form implementation used by the training
+step (learner replicas stacked on a sharded leading axis); the explicit
+matrix constructors exist for analysis and the hypothesis/property tests
+(doubly-stochasticity, T^n → T_u consensus).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Explicit matrices (analysis / tests)
+# ---------------------------------------------------------------------------
+
+def ring_matrix(L: int) -> np.ndarray:
+    """T_1: tridiagonal-with-wraparound, 1/3 each (paper's example)."""
+    if L == 1:
+        return np.ones((1, 1))
+    if L == 2:
+        # degenerate ring: self + the single neighbor (counted twice in the
+        # tridiagonal pattern) -> [2/3, 1/3]
+        return np.array([[2 / 3, 1 / 3], [1 / 3, 2 / 3]])
+    T = np.zeros((L, L))
+    for i in range(L):
+        T[i, i] = 1 / 3
+        T[i, (i - 1) % L] = 1 / 3
+        T[i, (i + 1) % L] = 1 / 3
+    return T
+
+
+def uniform_matrix(L: int) -> np.ndarray:
+    """T_u: global model averaging."""
+    return np.full((L, L), 1.0 / L)
+
+
+def identity_matrix(L: int) -> np.ndarray:
+    return np.eye(L)
+
+
+def is_doubly_stochastic(T: np.ndarray, atol: float = 1e-6) -> bool:
+    return (
+        bool(np.all(T >= -atol))
+        and np.allclose(T.sum(0), 1.0, atol=atol)
+        and np.allclose(T.sum(1), 1.0, atol=atol)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Collective-form application (training step)
+# ---------------------------------------------------------------------------
+
+def mix_ring(params):
+    """(w[l-1] + w[l] + w[l+1]) / 3 along the stacked learner axis 0.
+
+    ``jnp.roll`` along a mesh-sharded axis lowers to collective-permute —
+    the decentralized communication pattern of SD/AD-PSGD, with cost
+    independent of the learner count (paper §IV-C).
+    """
+    def one(w):
+        if w.shape[0] == 1:
+            return w
+        # roll FIRST (collective-permute moves the native — usually bf16 —
+        # payload; upcasting before the roll doubles wire bytes for free,
+        # see EXPERIMENTS.md §Perf iter 3), then average in f32.  The
+        # optimization_barrier stops XLA from commuting the convert back
+        # across the permute.
+        def roll_native(shift):
+            return jax.lax.optimization_barrier(
+                jnp.roll(w, shift, axis=0)).astype(jnp.float32)
+
+        wf = w.astype(jnp.float32)
+        if w.shape[0] == 2:
+            mixed = (2 * wf + roll_native(1)) / 3.0
+        else:
+            mixed = (wf + roll_native(1) + roll_native(-1)) / 3.0
+        return mixed.astype(w.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def mix_uniform(params):
+    """Global model averaging (T_u) — the allreduce PS realization."""
+    def one(w):
+        wf = w.astype(jnp.float32)
+        return jnp.broadcast_to(
+            jnp.mean(wf, axis=0, keepdims=True), wf.shape).astype(w.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def mix_matrix(params, T):
+    """General doubly-stochastic mixing (research/analysis path)."""
+    Tj = jnp.asarray(T, jnp.float32)
+
+    def one(w):
+        wf = w.astype(jnp.float32)
+        return jnp.einsum("l...,ml->m...", wf, Tj).astype(w.dtype)
+
+    return jax.tree.map(one, params)
+
+
+MIXERS = {
+    "ring": mix_ring,
+    "uniform": mix_uniform,
+    "none": lambda p: p,
+}
+
+
+def get_mixer(kind: str, n_learners: int = 0):
+    """Returns mixer(params, step) -> params.  'ring_q8' (int8 payloads)
+    and 'exp' (one-peer exponential graph) are the beyond-paper mixers from
+    repro.core.compression."""
+    if kind == "ring_q8":
+        from repro.core.compression import mix_ring_q8
+        return lambda p, step=None: mix_ring_q8(p)
+    if kind == "exp":
+        from repro.core.compression import make_exp_mixer
+        assert n_learners, "exp mixer needs the learner count"
+        mixer = make_exp_mixer(n_learners)
+        return lambda p, step=None: mixer(p, step)
+    f = MIXERS[kind]
+    return lambda p, step=None: f(p)

@@ -1,0 +1,281 @@
+"""Distributed training strategies (the paper's contribution, §IV-V).
+
+Implemented strategies, all expressed in the decentralized formalism of
+paper Eq. 14  (W_{k+1} = W_k·T − α·g(Φ_k, ξ_k)):
+
+==========  =====================  =========  =============================
+name        T (mixing)             Φ_k        paper reference
+==========  =====================  =========  =============================
+sc_psgd     T_u (allreduce)        W_k        §IV-B1 sync centralized; with
+                                              L=1 replicas this is plain
+                                              data-parallel SGD + psum
+                                              (Eq. 13 equivalence)
+sd_psgd     T_1 (ring permute)     W_k        §IV-C sync decentralized
+ad_psgd     T_1 (ring permute)     W_{k-1}    §IV-C async decentralized:
+                                              one-step-stale gradients let
+                                              XLA overlap the mixing
+                                              collective with compute
+bmuf        block-level T_u        W_k local  §IV-B1 (Chen & Huo): local SGD
+                                              for a block, then blockwise
+                                              model-update filtering with
+                                              block momentum
+downpour    PS (simulated)         W_{k-1}    §IV-B2 async centralized
+hring       T_1 over pods +        W_{k-1}    §V second experiment: NCCL
+            T_u within pod                    allreduce inside a node
+                                              (super-learner), AD-PSGD ring
+                                              across nodes -> 'pod' axis
+==========  =====================  =========  =============================
+
+TPU/SPMD adaptation (DESIGN.md §Asynchrony): true wall-clock asynchrony
+does not exist in a single SPMD program, so AD-PSGD's asynchrony is modeled
+*deterministically* as bounded staleness — gradients are evaluated at the
+previous iterate while the mixing of the current iterate proceeds in
+parallel.  This is exactly the communication/computation overlap the paper
+credits for AD-PSGD's speedup, and it preserves the algorithm's convergence
+analysis (staleness tau=1..tau_max).  Wall-clock effects (stragglers, load
+balancing, Table II/III) are studied with the discrete-event simulator in
+``benchmarks/perfsim.py``.
+
+Learner replicas are a stacked leading axis sharded over the mesh
+('data' axis on one pod; 'pod' axis for hring), so each chip only ever
+holds its own learner's shard — replication costs no extra HBM per chip.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mixing
+from repro.optim.optimizers import Optimizer
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def split_learner_batch(batch, n_learners: int):
+    """(B, ...) -> (L, B/L, ...) on every input leaf."""
+    def one(x):
+        B = x.shape[0]
+        assert B % n_learners == 0, (B, n_learners)
+        return x.reshape(n_learners, B // n_learners, *x.shape[1:])
+
+    return jax.tree.map(one, batch)
+
+
+def _accumulated_grad(loss_fn, params, batch, n_micro: int):
+    """Gradient with optional microbatch accumulation (memory knob)."""
+    if n_micro <= 1:
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, g
+
+    def slice_micro(x):
+        # split on the MINOR position of the batch dim (strided microbatches)
+        # so a data/pod-sharded batch axis stays GSPMD-representable after
+        # the reshape; (n_micro, B, ...) major-split is not when the shard
+        # size doesn't divide B/n_micro contiguously.
+        B = x.shape[0]
+        x = x.reshape(B // n_micro, n_micro, *x.shape[1:])
+        return jnp.moveaxis(x, 1, 0)
+
+    mb = jax.tree.map(slice_micro, batch)
+
+    def body(carry, mbatch):
+        acc, loss_acc = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+        acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+        return (acc, loss_acc + loss), None
+
+    g0 = jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
+    (g, loss), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), mb)
+    scale = 1.0 / n_micro
+    return loss * scale, jax.tree.map(lambda x: x * scale, g)
+
+
+def consensus_distance(params):
+    """Mean L2 distance of learner replicas from their average — the
+    consensus diagnostic for decentralized SGD (paper §IV-C)."""
+    def one(w):
+        if w.ndim == 0 or w.shape[0] == 1:
+            return jnp.float32(0.0), jnp.float32(1.0)
+        wf = w.astype(jnp.float32)
+        mu = jnp.mean(wf, axis=0, keepdims=True)
+        return jnp.sum(jnp.square(wf - mu)), jnp.float32(wf.size)
+
+    parts = [one(w) for w in jax.tree.leaves(params)]
+    num = sum(p[0] for p in parts)
+    den = sum(p[1] for p in parts)
+    return jnp.sqrt(num / den)
+
+
+# ---------------------------------------------------------------------------
+# Strategy definitions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Strategy:
+    """A distributed training strategy built around paper Eq. 14."""
+
+    name: str
+    mixer: str                  # 'ring' | 'uniform' | 'none'
+    stale: bool = False         # gradients at W_{k-1} (async modeling)
+    replicated: bool = True     # params carry a leading learner axis
+    block_size: int = 0         # >0: BMUF block length (in steps)
+    block_momentum: float = 0.9
+    block_lr: float = 1.0
+
+
+STRATEGIES = {
+    "sc_psgd": Strategy("sc_psgd", mixer="uniform", replicated=False),
+    "sc_psgd_replicated": Strategy("sc_psgd_replicated", mixer="uniform"),
+    "sd_psgd": Strategy("sd_psgd", mixer="ring"),
+    "ad_psgd": Strategy("ad_psgd", mixer="ring", stale=True),
+    "downpour": Strategy("downpour", mixer="uniform", stale=True),
+    "bmuf": Strategy("bmuf", mixer="none", block_size=16),
+    "hring": Strategy("hring", mixer="ring", stale=True),
+    # beyond-paper (anchored in §IV-D comm-reduction survey; see
+    # repro.core.compression):
+    "ad_psgd_q8": Strategy("ad_psgd_q8", mixer="ring_q8", stale=True),
+    "ad_psgd_exp": Strategy("ad_psgd_exp", mixer="exp", stale=True),
+}
+
+
+def get_strategy(name: str) -> Strategy:
+    return STRATEGIES[name]
+
+
+# ---------------------------------------------------------------------------
+# Train state / step builder
+# ---------------------------------------------------------------------------
+
+def init_state(strategy: Strategy, params, optimizer: Optimizer):
+    """params: already stacked with the learner dim if strategy.replicated."""
+    state = {
+        "params": params,
+        "opt": (jax.vmap(optimizer.init)(params)
+                if strategy.replicated and _learner_dim(params) > 1
+                else optimizer.init(params)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    # distinct buffers (not aliases of params) so the whole state is donatable
+    copy = lambda t: jax.tree.map(jnp.copy, t)
+    if strategy.stale:
+        state["prev_params"] = copy(params)
+    if strategy.block_size:
+        state["anchor"] = copy(params)
+        state["block_mom"] = jax.tree.map(
+            lambda w: jnp.zeros(w.shape, jnp.float32), params)
+    return state
+
+
+def _learner_dim(params) -> int:
+    return jax.tree.leaves(params)[0].shape[0]
+
+
+def make_train_step(strategy: Strategy, loss_fn: Callable,
+                    optimizer: Optimizer, lr_schedule: Callable,
+                    *, n_learners: int = 1, microbatches: int = 1,
+                    with_consensus: bool = False, pre_split: bool = False):
+    """Build the jittable train step.
+
+    loss_fn(params, batch) -> scalar, over UNstacked params/batch.
+    For replicated strategies the step expects state['params'] stacked
+    (L, ...) and the global batch either pre-split to (L, B/L, ...) with an
+    explicit ('learner','batch',...) sharding (``pre_split=True`` — required
+    when the learner axis is 'pod': an in-step reshape of a data-sharded
+    batch dim into (pod, data) is not GSPMD-representable and silently
+    replicates the learner work), or flat (B, ...) to be reshaped here.
+    """
+    mixer = mixing.get_mixer(strategy.mixer, n_learners)
+
+    def grad_one(params, batch):
+        return _accumulated_grad(loss_fn, params, batch, microbatches)
+
+    def step(state, batch):
+        lr = lr_schedule(state["step"])
+        metrics = {}
+
+        if not strategy.replicated:
+            # plain data-parallel SGD: gradient averaging over the data axis
+            # happens through GSPMD (batch sharded, params replicated/FSDP) —
+            # the allreduce realization of the PS (paper Eq. 13).
+            loss, g = grad_one(state["params"], batch)
+            new_params, opt = optimizer.update(g, state["opt"],
+                                               state["params"], lr)
+            out = {"params": new_params, "opt": opt,
+                   "step": state["step"] + 1}
+            metrics["loss"] = loss
+            return out, metrics
+
+        lbatch = batch if pre_split else split_learner_batch(batch, n_learners)
+        grad_at = state["prev_params"] if strategy.stale else state["params"]
+        loss_l, g_l = jax.vmap(grad_one)(grad_at, lbatch)
+        metrics["loss"] = jnp.mean(loss_l)
+
+        if strategy.block_size:
+            # BMUF: local SGD inside a block; blockwise model-update
+            # filtering at block boundaries.
+            upd_params, opt = jax.vmap(
+                optimizer.update, in_axes=(0, 0, 0, None)
+            )(g_l, state["opt"], state["params"], lr)
+            step_no = state["step"] + 1
+            is_sync = (step_no % strategy.block_size) == 0
+
+            def do_sync(args):
+                params, anchor, mom = args
+                avg = mixing.mix_uniform(params)
+                delta = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  - b.astype(jnp.float32)), avg, anchor)
+                mom = jax.tree.map(
+                    lambda m, d: strategy.block_momentum * m
+                    + strategy.block_lr * d, mom, delta)
+                new = jax.tree.map(
+                    lambda b, m: (b.astype(jnp.float32) + m).astype(b.dtype),
+                    anchor, mom)
+                return new, new, mom
+
+            def no_sync(args):
+                params, anchor, mom = args
+                return params, anchor, mom
+
+            new_params, anchor, mom = jax.lax.cond(
+                is_sync, do_sync, no_sync,
+                (upd_params, state["anchor"], state["block_mom"]))
+            out = {"params": new_params, "opt": opt, "step": step_no,
+                   "anchor": anchor, "block_mom": mom}
+        else:
+            # Eq. 14: mixing of the current iterate is data-independent of
+            # the gradient (evaluated at prev iterate when stale) -> XLA can
+            # schedule the collective concurrently with compute.
+            mixed = mixer(state["params"], state["step"])
+            new_params, opt = jax.vmap(
+                optimizer.update, in_axes=(0, 0, 0, None)
+            )(g_l, state["opt"], mixed, lr)
+            out = {"params": new_params, "opt": opt,
+                   "step": state["step"] + 1}
+
+        if strategy.stale:
+            out["prev_params"] = state["params"]
+        if with_consensus:
+            metrics["consensus"] = consensus_distance(out["params"])
+        return out, metrics
+
+    return step
+
+
+def stack_for_learners(params, n_learners: int):
+    """Replicate freshly-initialized params into the stacked learner axis."""
+    return jax.tree.map(
+        lambda w: jnp.broadcast_to(w[None], (n_learners,) + w.shape), params)
+
+
+def average_learners(params):
+    """Collapse replicas to the consensus model (for eval/checkpoint)."""
+    return jax.tree.map(
+        lambda w: jnp.mean(w.astype(jnp.float32), axis=0).astype(w.dtype),
+        params)

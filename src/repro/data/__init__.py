@@ -1,0 +1,7 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticASRDataset,
+    SyntheticLMDataset,
+    SyntheticSeq2SeqDataset,
+    SyntheticVLMDataset,
+    make_dataset,
+)

@@ -1,0 +1,6 @@
+from repro.eval.metrics import (  # noqa: F401
+    edit_distance,
+    frame_error_rate,
+    greedy_ctc_decode,
+    token_error_rate,
+)

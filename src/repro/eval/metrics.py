@@ -1,0 +1,55 @@
+"""Recognition-quality metrics (the paper reports WER on Hub5'00; with
+synthetic data the analogues are frame error rate for the CE-trained
+DNN-HMM and token error rate — the same Levenshtein WER formula over
+synthetic token sequences — for CTC/seq2seq models)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def edit_distance(ref, hyp) -> int:
+    """Levenshtein distance between two sequences (the WER numerator)."""
+    ref, hyp = list(ref), list(hyp)
+    m, n = len(ref), len(hyp)
+    dp = np.arange(n + 1)
+    for i in range(1, m + 1):
+        prev_diag = dp[0]
+        dp[0] = i
+        for j in range(1, n + 1):
+            cur = dp[j]
+            dp[j] = min(dp[j] + 1,          # deletion
+                        dp[j - 1] + 1,      # insertion
+                        prev_diag + (ref[i - 1] != hyp[j - 1]))
+            prev_diag = cur
+    return int(dp[n])
+
+
+def token_error_rate(refs, hyps) -> float:
+    """sum(edit distances) / sum(ref lengths) — i.e. WER over tokens."""
+    num = sum(edit_distance(r, h) for r, h in zip(refs, hyps))
+    den = sum(max(len(r), 1) for r in refs)
+    return num / den
+
+
+def frame_error_rate(logits, labels) -> float:
+    """Framewise classification error of the DNN-HMM (CE-trained) model.
+    logits: (B,T,V) array-like; labels: (B,T)."""
+    pred = np.asarray(logits).argmax(-1)
+    labels = np.asarray(labels)
+    return float((pred != labels).mean())
+
+
+def greedy_ctc_decode(logits, *, blank: int = 0):
+    """Best-path CTC decoding: argmax per frame, merge repeats, drop
+    blanks.  logits: (B,T,V).  Returns list of int lists."""
+    pred = np.asarray(logits).argmax(-1)
+    out = []
+    for row in pred:
+        seq, prev = [], None
+        for c in row:
+            c = int(c)
+            if c != prev and c != blank:
+                seq.append(c)
+            prev = c
+        out.append(seq)
+    return out

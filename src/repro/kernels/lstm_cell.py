@@ -1,0 +1,86 @@
+"""Pallas TPU fused LSTM sequence kernel (the paper's compute hot-spot).
+
+The paper's acoustic model spends its time in 6 bi-LSTM layers (Table I:
+165MB model, 0.07 s/batch on a P100).  A time-step of LSTM is two skinny
+matmuls plus elementwise gates — dominated by weight re-reads from HBM if
+each step round-trips.  The TPU adaptation keeps BOTH weight matrices and
+the recurrent (h, c) state resident in VMEM across the whole unroll and
+walks time on the sequential grid axis, so HBM traffic per step is just
+x_t in / h_t out:
+
+  grid = (T,);  VMEM blocks: x_t (B,D), Wx (D,4H), Wh (H,4H); scratch h,c.
+
+Gate layout (i|f|g|o) matches ``repro.models.lstm.lstm_cell_step``, which
+is the oracle via ``repro.kernels.ref.lstm_ref`` (forget-gate bias +1).
+
+For the paper's shape (D=260, H=512, 4H=2048) everything fits easily:
+Wx+Wh ≈ 0.8M params ≈ 1.6MB bf16, per-step state B×H×8B ≈ 1MB at B=256.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lstm_kernel(x_ref, wx_ref, wh_ref, b_ref, o_ref, h_ref, c_ref):
+    """One time step.  x_ref: (B, D); o_ref: (B, H); scratch h/c: (B, H)."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    x = x_ref[...]
+    h = h_ref[...]
+    gates = (
+        jax.lax.dot_general(x, wx_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + jax.lax.dot_general(h.astype(x.dtype), wh_ref[...],
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+        + b_ref[...][None, :]
+    )
+    H = h_ref.shape[-1]
+    i = gates[:, 0 * H:1 * H]
+    f = gates[:, 1 * H:2 * H]
+    g = gates[:, 2 * H:3 * H]
+    o = gates[:, 3 * H:4 * H]
+    c = (jax.nn.sigmoid(f + 1.0) * c_ref[...]
+         + jax.nn.sigmoid(i) * jnp.tanh(g))
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c)
+    c_ref[...] = c
+    h_ref[...] = h_new
+    o_ref[...] = h_new.astype(o_ref.dtype)
+
+
+def lstm_sequence(wx, wh, b, x, *, reverse: bool = False,
+                  interpret: bool = None):
+    """x: (B, T, D) -> (B, T, H); weights wx (D,4H), wh (H,4H), b (4H,)."""
+    B, T, D = x.shape
+    H = wh.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def x_map(t):
+        return (0, (T - 1 - t) if reverse else t, 0)
+
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((B, None, D), x_map),
+            pl.BlockSpec((D, 4 * H), lambda t: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda t: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((B, None, H), x_map),
+        out_shape=jax.ShapeDtypeStruct((B, T, H), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),
+            pltpu.VMEM((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, wx, wh, b)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each reference is written for clarity/exactness, not speed:
+
+* ``attention_ref``  — full softmax attention with causal/window masks.
+* ``lstm_ref``       — step-by-step LSTM via ``repro.models.lstm``.
+* ``ssd_ref``        — the exact sequential SSM recurrence (no chunking),
+                       which also oracles ``repro.models.ssm.ssd_chunked``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0):
+    """q: (B,Sq,H,E); k/v: (B,Sk,KV,E) -> (B,Sq,H,E), f32 math."""
+    B, Sq, H, E = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    M = H // KV
+    qg = q.reshape(B, Sq, KV, M, E).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bsgme,btge->bgmst", qg, kf) / np.sqrt(E)
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        k_pos = jnp.arange(Sk)
+        ok = q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            ok &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgmst,btge->bsgme", p, vf)
+    return o.reshape(B, Sq, H, E).astype(q.dtype)
+
+
+def lstm_ref(wx, wh, b, x, *, reverse: bool = False):
+    """Matches kernels.lstm_cell.lstm_sequence; gate order i|f|g|o,
+    forget bias +1."""
+    from repro.models.lstm import lstm_cell_step
+
+    B, T, D = x.shape
+    H = wh.shape[0]
+    h = jnp.zeros((B, H), x.dtype)
+    c = jnp.zeros((B, H), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell_step(wx, wh, b, x_t, h, c)
+        return (h, c), h
+
+    xs = jnp.moveaxis(x, 1, 0)
+    _, hs = jax.lax.scan(step, (h, c), xs, reverse=reverse)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Exact token-by-token SSM recurrence.
+
+    x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,H,N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t . h_t
+    Returns (y (B,S,H,P) like x.dtype, h_final (B,H,N,P) f32).
+    """
+    B, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t * A)                       # (B,H)
+        h = (dA[:, :, None, None] * h
+             + jnp.einsum("bhn,bh,bhp->bhnp", B_t, dt_t, x_t))
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, Pd), jnp.float32)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xf, dtf, Bf, Cf))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final
+
+
+def moe_dense_ref(x, router_w, wi, wg, wo, *, act: str = "swiglu"):
+    """Oracle for kernels.moe_dense: y = sum_e w[:,e] * ffn_e(x)."""
+    h = jnp.einsum("td,edf->tef", x, wi)
+    if act == "swiglu":
+        g = jnp.einsum("td,edf->tef", x, wg)
+        h = jax.nn.silu(g.astype(jnp.float32)) * h.astype(jnp.float32)
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32))
+    ye = jnp.einsum("tef,efd->ted", h.astype(x.dtype), wo)
+    return jnp.einsum("ted,te->td", ye.astype(jnp.float32),
+                      router_w.astype(jnp.float32)).astype(x.dtype)

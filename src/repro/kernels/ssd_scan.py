@@ -1,0 +1,124 @@
+"""Pallas TPU chunked SSD (mamba-2) kernel.
+
+TPU adaptation of the SSD algorithm [arXiv:2405.21060 §6]: the per-chunk
+quadratic part is a pair of MXU matmuls over (chunk x chunk) tiles held in
+VMEM; the inter-chunk state recurrence rides the sequential grid axis in a
+VMEM scratch accumulator (h: heads x state x head_dim, f32), so the state
+never round-trips to HBM between chunks.
+
+  grid = (B, n_chunks)   (chunk axis sequential, state carried in scratch)
+  VMEM blocks per program: x (Q,H,P), dt (Q,H), B/C (Q,H,N)
+
+Chunk length Q=256 and P=64, N<=128 keep every matmul tile MXU-shaped
+(>=128 contracting / 128-lane) for the assigned ssm/hybrid configs.
+
+Oracle: ``repro.kernels.ref.ssd_ref`` (exact sequential recurrence);
+``repro.models.ssm.ssd_chunked`` is the pure-jnp chunked equivalent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hlast_ref,
+                h_ref):
+    """One (batch, chunk) program.
+
+    x_ref: (Q,H,P), dt_ref: (Q,H), a_ref: (H,), b_ref/c_ref: (Q,H,N)
+    y_ref: (Q,H,P) out; hlast_ref: (H,N,P) out (final state);
+    h_ref: (H,N,P) f32 scratch carrying the running state across chunks.
+    """
+    chunk_idx = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(chunk_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...].astype(jnp.float32)           # (Q,H,P)
+    dt = dt_ref[...].astype(jnp.float32)         # (Q,H)
+    A = a_ref[...].astype(jnp.float32)           # (H,)
+    Bm = b_ref[...].astype(jnp.float32)          # (Q,H,N)
+    Cm = c_ref[...].astype(jnp.float32)          # (Q,H,N)
+
+    Q = x.shape[0]
+    dtA = dt * A[None, :]                        # (Q,H), negative
+    cum = jnp.cumsum(dtA, axis=0)                # (Q,H)
+
+    # ---- intra-chunk quadratic part (MXU): scores (H,Q,K)
+    scores = jax.lax.dot_general(
+        jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(Bm, 1, 0),
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+    diff = cum[:, None, :] - cum[None, :, :]                  # (Q,K,H)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    decay = jnp.exp(jnp.where(mask[:, :, None], diff, -1e30))  # overflow-safe
+    w = scores * jnp.moveaxis(decay, 2, 0)
+    wdt = w * jnp.moveaxis(dt, 1, 0)[:, None, :]              # (H,Q,K)*dt_k
+    y = jax.lax.dot_general(
+        wdt, jnp.moveaxis(x, 1, 0),
+        (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+    y = jnp.moveaxis(y, 0, 1)                                  # (Q,H,P)
+
+    # ---- inter-chunk: contribution of the carried state
+    h = h_ref[...]                                             # (H,N,P)
+    out_decay = jnp.exp(cum)                                   # (Q,H)
+    y_inter = jax.lax.dot_general(
+        jnp.moveaxis(Cm, 1, 0), h,
+        (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+    y = y + jnp.moveaxis(y_inter, 0, 1) * out_decay[:, :, None]
+
+    # ---- state update
+    last = cum[-1:, :]                                         # (1,H)
+    in_decay = jnp.exp(last - cum) * dt                        # (Q,H)
+    S_c = jax.lax.dot_general(
+        jnp.moveaxis(Bm * in_decay[:, :, None], 1, 0),
+        jnp.moveaxis(x, 1, 0),
+        (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+    h_ref[...] = jnp.exp(last[0])[:, None, None] * h + S_c
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    @pl.when(chunk_idx == n_chunks - 1)
+    def _emit_state():
+        hlast_ref[...] = h_ref[...].astype(hlast_ref.dtype)
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = None):
+    """x: (B,S,H,P), dt: (B,S,H) f32, A: (H,), Bm/Cm: (B,S,H,N).
+    Returns (y (B,S,H,P), final_state (B,H,N,P) f32)."""
+    B, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid = (B, S // Q)
+    y, hlast = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, Q, H, Pd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, Q, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((None, Q, H, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, Q, H, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, Q, H, Pd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, H, N, Pd), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, Pd), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, Pd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, N, Pd), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, hlast

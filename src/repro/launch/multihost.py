@@ -1,0 +1,71 @@
+"""Multi-host / multi-process launch scaffolding.
+
+On a real TPU pod each host runs this same program; ``initialize()`` wires
+``jax.distributed`` (coordinator discovery via TPU metadata or explicit
+flags), after which ``jax.devices()`` spans the full pod and
+``make_production_mesh()`` lays the global mesh over it.  Data loading is
+per-host: each host synthesizes/loads only the batch rows that live on its
+addressable devices (``host_batch_slice``), and global arrays are built
+with ``jax.make_array_from_process_local_data``.
+
+In this CPU container there is a single process; everything degrades to
+the local path (tested in tests/test_multihost.py), and the multi-process
+behaviour is exercised on real clusters via the same entry points:
+
+  python -m repro.launch.train --arch ... --mesh pod   # per host, with
+  JAX_COORDINATOR_ADDRESS / JAX_NUM_PROCESSES / JAX_PROCESS_ID set.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def initialize(coordinator: str = "", num_processes: int = 0,
+               process_id: int = -1) -> bool:
+    """Initialize jax.distributed when running multi-process; no-op (False)
+    in single-process runs so tests/examples need no special casing."""
+    coordinator = coordinator or os.environ.get("JAX_COORDINATOR_ADDRESS", "")
+    num_processes = num_processes or int(
+        os.environ.get("JAX_NUM_PROCESSES", "0"))
+    if not coordinator or num_processes <= 1:
+        return False
+    process_id = process_id if process_id >= 0 else int(
+        os.environ.get("JAX_PROCESS_ID", "0"))
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
+
+
+def host_batch_slice(global_batch: int):
+    """(start, size) of this host's rows of the global batch, assuming the
+    batch dim is sharded over data-parallel devices in process order (the
+    layout make_production_mesh produces)."""
+    n = jax.process_count()
+    idx = jax.process_index()
+    assert global_batch % n == 0, (global_batch, n)
+    per = global_batch // n
+    return idx * per, per
+
+
+def make_global_batch(batch_np: dict, mesh, rules, input_axes: dict):
+    """Host-local numpy rows -> global jax.Arrays on the mesh.
+
+    batch_np holds ONLY this host's rows (see host_batch_slice).
+    input_axes: leaf name -> logical axes tuple (as in Model.input_specs).
+    Single-process: a plain device_put with the same shardings.
+    """
+    out = {}
+    for k, v in batch_np.items():
+        axes = input_axes[k]
+        global_shape = (v.shape[0] * jax.process_count(),) + v.shape[1:]
+        sharding = rules.sharding(global_shape, axes)
+        if jax.process_count() == 1:
+            out[k] = jax.device_put(np.asarray(v), sharding)
+        else:
+            out[k] = jax.make_array_from_process_local_data(
+                sharding, np.asarray(v), global_shape)
+    return out

@@ -1,0 +1,158 @@
+"""Training launcher.
+
+Library entry point: :func:`setup_training` builds (state, step_fn, meta)
+for any (arch, strategy, mesh); the CLI runs the loop with prefetching,
+logging and checkpointing.
+
+Examples
+--------
+# paper's acoustic model, AD-PSGD, 4 simulated learners, reduced size:
+PYTHONPATH=src python -m repro.launch.train --arch swb2000-blstm \
+    --reduced --learners 4 --strategy ad_psgd --steps 200
+
+# any assigned arch:
+PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+    --strategy sd_psgd --steps 50 --seq-len 128 --batch 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore, save
+from repro.configs import get_arch
+from repro.core import strategies as ST
+from repro.data import make_dataset
+from repro.data.pipeline import Prefetcher
+from repro.launch.mesh import make_local_mesh, make_production_mesh, rules_for
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+from repro.optim.schedules import paper_recipe, warmup_then_anneal
+from repro.sharding import init_spec_tree, spec_tree_shardings
+
+
+def setup_training(cfg, mesh, *, strategy_name: str = None,
+                   n_learners: int = None, optimizer_name: str = "sgd",
+                   lr_schedule=None, seed: int = 0, multi_pod: bool = False,
+                   with_consensus: bool = False, kernel_impl: str = "jax",
+                   microbatches: int = None):
+    """Build sharded train state + jitted step for one arch on one mesh."""
+    strategy = ST.get_strategy(strategy_name or cfg.train_strategy)
+    n_learners = n_learners if n_learners is not None else cfg.n_learners
+    if not strategy.replicated:
+        n_learners = 1
+    microbatches = (microbatches if microbatches is not None
+                    else cfg.microbatches)
+    model = build_model(cfg)
+    rules = rules_for(cfg, mesh, multi_pod=multi_pod)
+    opt = get_optimizer(optimizer_name)
+    lr_schedule = lr_schedule or warmup_then_anneal(0.1, 0.5, 100, 10_000,
+                                                    1 / np.sqrt(2))
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, kernel_impl=kernel_impl)
+
+    step_fn = ST.make_train_step(
+        strategy, loss_fn, opt, lr_schedule,
+        n_learners=n_learners, microbatches=microbatches,
+        with_consensus=with_consensus)
+
+    pspecs = model.param_specs()
+    lead = ((n_learners, "learner"),) if strategy.replicated else ()
+    param_shardings = spec_tree_shardings(pspecs, rules, extra_leading=lead)
+
+    with jax.set_mesh(mesh):
+        params = init_spec_tree(pspecs, jax.random.PRNGKey(seed))
+        if strategy.replicated:
+            params = ST.stack_for_learners(params, n_learners)
+        params = jax.tree.map(jax.device_put, params, param_shardings)
+        state = ST.init_state(strategy, params, opt)
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    meta = dict(model=model, rules=rules, strategy=strategy,
+                n_learners=n_learners, mesh=mesh)
+    return state, jit_step, meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--strategy", default=None,
+                    choices=[None] + sorted(ST.STRATEGIES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--learners", type=int, default=None)
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant of the arch (CPU-friendly)")
+    ap.add_argument("--mesh", default="local",
+                    choices=["local", "pod", "multipod"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--consensus", action="store_true")
+    ap.add_argument("--kernel-impl", default="jax",
+                    choices=["jax", "pallas"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    seq_len = args.seq_len or (21 if cfg.family == "lstm" else 128)
+    n_learners = args.learners if args.learners is not None else cfg.n_learners
+    strategy = ST.get_strategy(args.strategy or cfg.train_strategy)
+    if not strategy.replicated:
+        n_learners = 1
+    batch = args.batch or max(8, 2 * n_learners)
+
+    if args.mesh == "local":
+        mesh = make_local_mesh(data=len(jax.devices()))
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    state, jit_step, meta = setup_training(
+        cfg, mesh, strategy_name=strategy.name, n_learners=n_learners,
+        optimizer_name=args.optimizer, seed=args.seed,
+        multi_pod=args.mesh == "multipod", with_consensus=args.consensus,
+        kernel_impl=args.kernel_impl,
+        lr_schedule=paper_recipe(steps_per_epoch=max(args.steps // 16, 1),
+                                 base_lr=0.05, peak_lr=0.2))
+
+    start = 0
+    if args.ckpt_dir:
+        try:
+            state, start = restore(args.ckpt_dir, state)
+            print(f"restored checkpoint at step {start}")
+        except FileNotFoundError:
+            pass
+
+    ds = make_dataset(cfg, seq_len=seq_len, batch=batch, seed=args.seed)
+    pf = Prefetcher(ds, start_step=start)
+    t0 = time.time()
+    with jax.set_mesh(meta["mesh"]):
+        for k in range(start, args.steps):
+            batch_np = pf.next()
+            state, metrics = jit_step(state, batch_np)
+            if k % args.log_every == 0:
+                loss = float(metrics["loss"])
+                line = (f"step {k:5d} loss {loss:.4f} "
+                        f"({(time.time()-t0):.1f}s)")
+                if "consensus" in metrics:
+                    line += f" consensus {float(metrics['consensus']):.3e}"
+                print(line, flush=True)
+            if args.ckpt_dir and args.ckpt_every and \
+                    (k + 1) % args.ckpt_every == 0:
+                save(args.ckpt_dir, k + 1, state)
+    pf.close()
+    print(f"done: {args.steps - start} steps in {time.time()-t0:.1f}s "
+          f"[{meta['strategy'].name}, L={meta['n_learners']}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.api import (  # noqa: F401
+    build_model,
+    Model,
+)

@@ -1,0 +1,93 @@
+"""CTC loss (Graves et al. 2006) — the paper's §III names CTC as the
+emerging end-to-end ASR criterion alongside frame-CE; provided so the
+acoustic-model substrate covers both.
+
+Standard alpha (forward) recursion over the blank-extended label sequence,
+in log space, time steps via ``lax.scan``.  Supports per-sequence label
+lengths (padded with -1).  Oracle: brute-force alignment enumeration in
+tests/test_ctc.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _logsumexp3(a, b, c):
+    m = jnp.maximum(jnp.maximum(a, b), c)
+    m = jnp.maximum(m, NEG)
+    return m + jnp.log(jnp.exp(a - m) + jnp.exp(b - m) + jnp.exp(c - m))
+
+
+def ctc_loss(logits, labels, label_lengths=None, *, blank: int = 0):
+    """logits: (B, T, V); labels: (B, U) int32 (pad with -1 beyond length);
+    label_lengths: (B,) int32 (default: count of non-negative labels).
+    Returns mean negative log likelihood over the batch."""
+    B, T, V = logits.shape
+    U = labels.shape[1]
+    if label_lengths is None:
+        label_lengths = jnp.sum(labels >= 0, axis=1)
+    labels = jnp.maximum(labels, 0)
+
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+    # blank-extended sequence z: (B, S=2U+1): [b, l1, b, l2, ..., lU, b]
+    S = 2 * U + 1
+    z = jnp.full((B, S), blank, jnp.int32)
+    z = z.at[:, 1::2].set(labels)
+    s_idx = jnp.arange(S)
+    valid = s_idx[None, :] < (2 * label_lengths + 1)[:, None]     # (B,S)
+    # skip-transition allowed where z_s is a label and != z_{s-2}
+    z_m2 = jnp.pad(z, ((0, 0), (2, 0)), constant_values=-1)[:, :S]
+    can_skip = (s_idx[None, :] % 2 == 1) & (z != z_m2)
+
+    def emit(t):
+        return jnp.take_along_axis(logp[:, t], z, axis=1)          # (B,S)
+
+    alpha0 = jnp.full((B, S), NEG)
+    alpha0 = alpha0.at[:, 0].set(logp[:, 0, blank])
+    alpha0 = alpha0.at[:, 1].set(
+        jnp.where(label_lengths > 0,
+                  jnp.take_along_axis(logp[:, 0], z[:, 1:2], 1)[:, 0], NEG))
+
+    def step(alpha, t):
+        prev1 = jnp.pad(alpha, ((0, 0), (1, 0)), constant_values=NEG)[:, :S]
+        prev2 = jnp.pad(alpha, ((0, 0), (2, 0)), constant_values=NEG)[:, :S]
+        prev2 = jnp.where(can_skip, prev2, NEG)
+        alpha = _logsumexp3(alpha, prev1, prev2) + emit(t)
+        alpha = jnp.where(valid, alpha, NEG)
+        return alpha, None
+
+    alpha, _ = jax.lax.scan(step, alpha0, jnp.arange(1, T))
+
+    last = 2 * label_lengths            # index of final blank
+    a_last = jnp.take_along_axis(alpha, last[:, None], 1)[:, 0]
+    a_prev = jnp.take_along_axis(
+        alpha, jnp.maximum(last - 1, 0)[:, None], 1)[:, 0]
+    a_prev = jnp.where(label_lengths > 0, a_prev, NEG)
+    m = jnp.maximum(a_last, a_prev)
+    nll = -(m + jnp.log(jnp.exp(a_last - m) + jnp.exp(a_prev - m)))
+    return jnp.mean(nll)
+
+
+def collapse_frame_labels(frame_labels, max_len: int, *, blank: int = 0):
+    """Frame-wise targets -> collapsed CTC label sequences (numpy, host
+    side): remove repeats, shift classes by +1 (0 reserved for blank),
+    pad with -1."""
+    import numpy as np
+
+    B, T = frame_labels.shape
+    out = np.full((B, max_len), -1, np.int32)
+    lens = np.zeros((B,), np.int32)
+    for b in range(B):
+        prev, j = None, 0
+        for t in range(T):
+            c = int(frame_labels[b, t])
+            if c != prev and j < max_len:
+                out[b, j] = c + 1
+                j += 1
+            prev = c
+        lens[b] = j
+    return out, lens

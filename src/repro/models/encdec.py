@@ -1,0 +1,177 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The mel-spectrogram + conv feature extractor is a STUB: the encoder
+consumes precomputed frame embeddings (B, S_enc, d_model) supplied by
+``input_specs`` (assignment carve-out).  Positions are sinusoidal for both
+stacks (adaptation from whisper's learned decoder positions — DESIGN.md).
+
+The assigned ``seq_len`` is split evenly: S_enc = S_dec = seq_len // 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models.common import (apply_norm, cross_entropy, norm_spec,
+                                 sinusoidal_positions)
+from repro.models.transformer import _pad_cache, _stack
+from repro.sharding import ParamSpec
+
+
+def enc_layer_specs(cfg):
+    return {
+        "ln1": norm_spec(cfg),
+        "attn": A.attn_param_specs(cfg),
+        "ln2": norm_spec(cfg),
+        "mlp": F.ffn_param_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg):
+    return {
+        "ln1": norm_spec(cfg),
+        "self_attn": A.attn_param_specs(cfg),
+        "lnx": norm_spec(cfg),
+        "cross_attn": A.attn_param_specs(cfg),
+        "ln2": norm_spec(cfg),
+        "mlp": F.ffn_param_specs(cfg),
+    }
+
+
+def param_specs(cfg):
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), cfg.param_dtype,
+                           ("vocab", "embed"), "normal", 0.02),
+        "enc_layers": _stack(enc_layer_specs(cfg), cfg.n_enc_layers),
+        "enc_norm": norm_spec(cfg),
+        "dec_layers": _stack(dec_layer_specs(cfg), cfg.n_layers),
+        "dec_norm": norm_spec(cfg),
+    }
+
+
+def _add_positions(x):
+    B, S_, d = x.shape
+    pos = sinusoidal_positions(jnp.arange(S_), d).astype(x.dtype)
+    return x + pos[None]
+
+
+def encode(cfg, params, frames, *, batch_axis="", fwd_only=False):
+    """frames: (B, S_enc, d) stub frame embeddings."""
+    x = _add_positions(frames.astype(jnp.bfloat16))
+    seq_shard = cfg.attn_sharding == "seq"
+
+    @jax.checkpoint
+    def layer(x, p):
+        h = apply_norm(p["ln1"], x)
+        q, k, v = A.qkv_project(cfg, p["attn"], h, h)
+        o = A.attn_seq(q, k, v, causal=False, seq_shard=seq_shard,
+                       seq_shard_chunked=seq_shard and fwd_only,
+                       batch_axis=batch_axis)
+        x = x + A.out_project(p["attn"], o)
+        x = x + F.ffn_apply(cfg, p["mlp"], apply_norm(p["ln2"], x))
+        return x.astype(jnp.bfloat16), None
+
+    x, _ = jax.lax.scan(layer, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x)
+
+
+def decode_seq(cfg, params, tokens, enc_out, *, collect_cache=False,
+               cache_len=0, batch_axis=""):
+    """Teacher-forced decoder over a full token sequence."""
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    x = _add_positions(x)
+    seq_shard = cfg.attn_sharding == "seq"
+    chunked = seq_shard and collect_cache
+
+    def layer(x, p):
+        h = apply_norm(p["ln1"], x)
+        q, k, v = A.qkv_project(cfg, p["self_attn"], h, h)
+        o = A.attn_seq(q, k, v, causal=True, seq_shard=seq_shard,
+                       seq_shard_chunked=chunked, batch_axis=batch_axis)
+        x = x + A.out_project(p["self_attn"], o)
+        h = apply_norm(p["lnx"], x)
+        q, ck, cv = A.qkv_project(cfg, p["cross_attn"], h, enc_out)
+        o = A.attn_seq(q, ck, cv, causal=False, seq_shard=seq_shard,
+                       seq_shard_chunked=chunked, batch_axis=batch_axis)
+        x = x + A.out_project(p["cross_attn"], o)
+        x = x + F.ffn_apply(cfg, p["mlp"], apply_norm(p["ln2"], x))
+        cache = (_pad_cache(k, v, cache_len), (ck, cv)) if collect_cache else ()
+        return x.astype(jnp.bfloat16), cache
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    return apply_norm(params["dec_norm"], x), caches
+
+
+def loss_train(cfg, params, batch, *, batch_axis="", **_):
+    enc_out = encode(cfg, params, batch["frames"], batch_axis=batch_axis)
+    x, _ = decode_seq(cfg, params, batch["tokens"], enc_out,
+                      batch_axis=batch_axis)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg, batch: int, cache_len: int, enc_len: int):
+    kv = lambda s: {
+        "k": ParamSpec((cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim),
+                       "bfloat16",
+                       ("layers", "batch", "cache_seq", "kv_heads",
+                        "head_dim")),
+        "v": ParamSpec((cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim),
+                       "bfloat16",
+                       ("layers", "batch", "cache_seq", "kv_heads",
+                        "head_dim")),
+    }
+    return {"self": kv(cache_len), "cross": kv(enc_len)}
+
+
+def prefill(cfg, params, frames, tokens, *, cache_len: int = 0,
+            batch_axis="data"):
+    enc_out = encode(cfg, params, frames, batch_axis=batch_axis,
+                     fwd_only=True)
+    cache_len = cache_len or tokens.shape[1]
+    x, caches = decode_seq(cfg, params, tokens, enc_out,
+                           collect_cache=True, cache_len=cache_len,
+                           batch_axis=batch_axis)
+    (k, v), (ck, cv) = caches
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:, :], params["embed"])
+    return logits, {"self": {"k": k, "v": v}, "cross": {"k": ck, "v": cv}}
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """One decoder token against self+cross caches."""
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    d = cfg.d_model
+    posemb = sinusoidal_positions(jnp.full((tokens.shape[0], 1), pos),
+                                  d).astype(x.dtype)
+    x = x + posemb
+
+    def layer(x, scanned):
+        p, cache_l = scanned
+        h = apply_norm(p["ln1"], x)
+        q, k, v = A.qkv_project(cfg, p["self_attn"], h, h)
+        kc = A.update_cache(cache_l["self"]["k"], k, pos)
+        vc = A.update_cache(cache_l["self"]["v"], v, pos)
+        o = A.attn_decode(q, kc, vc, pos)
+        x = x + A.out_project(p["self_attn"], o)
+        h = apply_norm(p["lnx"], x)
+        q = jnp.einsum("bsd,dhe->bshe", h, p["cross_attn"]["wq"])
+        if "bq" in p["cross_attn"]:
+            q = (q.astype(jnp.float32) + p["cross_attn"]["bq"]).astype(q.dtype)
+        ck, cv = cache_l["cross"]["k"], cache_l["cross"]["v"]
+        o = A.attn_decode(q, ck, cv, jnp.int32(ck.shape[1] - 1))
+        x = x + A.out_project(p["cross_attn"], o)
+        x = x + F.ffn_apply(cfg, p["mlp"], apply_norm(p["ln2"], x))
+        return x.astype(jnp.bfloat16), {"self": {"k": kc, "v": vc},
+                                        "cross": {"k": ck, "v": cv}}
+
+    x, new_cache = jax.lax.scan(layer, x, (params["dec_layers"], cache))
+    x = apply_norm(params["dec_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits, new_cache

@@ -1,0 +1,37 @@
+"""Dense (non-MoE) feed-forward blocks: SwiGLU / GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import gelu
+from repro.sharding import ParamSpec
+
+
+def ffn_param_specs(cfg, d_ff=None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    p = {
+        "wi": ParamSpec((d, ff), dt, ("embed", "mlp"), "lecun"),
+        "wo": ParamSpec((ff, d), dt, ("mlp", "embed"), "lecun"),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = ParamSpec((d, ff), dt, ("embed", "mlp"), "lecun")
+    if cfg.use_bias:
+        p["bi"] = ParamSpec((ff,), "float32", ("mlp",), "zeros")
+        p["bo"] = ParamSpec((d,), "float32", ("embed",), "zeros")
+    return p
+
+
+def ffn_apply(cfg, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if "bi" in p:
+        h = (h.astype(jnp.float32) + p["bi"]).astype(h.dtype)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"])) * h
+    else:
+        h = gelu(h)
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    if "bo" in p:
+        y = (y.astype(jnp.float32) + p["bo"]).astype(y.dtype)
+    return y

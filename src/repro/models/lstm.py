@@ -1,0 +1,101 @@
+"""The paper's acoustic model: 6-layer bi-directional LSTM DNN-HMM with a
+linear bottleneck and a 32,000-way CD-HMM-state softmax (Cui et al. §V).
+
+The LSTM cell is the compute hot-spot the Pallas kernel in
+``repro.kernels.lstm_cell`` fuses (gate matmuls + elementwise); this module
+doubles as its pure-jnp oracle through ``repro.kernels.ref``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cross_entropy
+from repro.sharding import ParamSpec
+
+
+def lstm_cell_step(wx, wh, b, x_t, h, c):
+    """One LSTM step.  x_t: (B,D_in); h/c: (B,H).  Gate order: i,f,g,o."""
+    gates = (jnp.einsum("bd,dg->bg", x_t, wx)
+             + jnp.einsum("bh,hg->bg", h, wh)).astype(jnp.float32) + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h.astype(x_t.dtype), c
+
+
+def lstm_layer(p, x, *, reverse: bool = False, kernel_impl: str = "jax"):
+    """x: (B,T,D_in) -> (B,T,H)."""
+    B, T, _ = x.shape
+    H = p["wh"].shape[0]
+    h0 = jnp.zeros((B, H), x.dtype)
+    c0 = jnp.zeros((B, H), jnp.float32)
+
+    if kernel_impl == "pallas":
+        from repro.kernels.ops import lstm_sequence
+        return lstm_sequence(p["wx"], p["wh"], p["b"], x, reverse=reverse)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell_step(p["wx"], p["wh"], p["b"], x_t, h, c)
+        return (h, c), h
+
+    xs = jnp.moveaxis(x, 1, 0)
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs, reverse=reverse)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def layer_specs(d_in: int, hidden: int, dtype: str):
+    return {
+        "fwd": {
+            "wx": ParamSpec((d_in, 4 * hidden), dtype,
+                            ("feature", "lstm_gates"), "lecun"),
+            "wh": ParamSpec((hidden, 4 * hidden), dtype,
+                            ("lstm_hidden", "lstm_gates"), "lecun"),
+            "b": ParamSpec((4 * hidden,), "float32", ("lstm_gates",), "zeros"),
+        },
+        "bwd": {
+            "wx": ParamSpec((d_in, 4 * hidden), dtype,
+                            ("feature", "lstm_gates"), "lecun"),
+            "wh": ParamSpec((hidden, 4 * hidden), dtype,
+                            ("lstm_hidden", "lstm_gates"), "lecun"),
+            "b": ParamSpec((4 * hidden,), "float32", ("lstm_gates",), "zeros"),
+        },
+    }
+
+
+def param_specs(cfg):
+    H = cfg.lstm_hidden
+    dt = cfg.param_dtype
+    layers = {}
+    d_in = cfg.input_dim
+    for i in range(cfg.n_layers):
+        layers[f"layer_{i}"] = layer_specs(d_in, H, dt)
+        d_in = 2 * H
+    return {
+        "layers": layers,
+        "bottleneck": ParamSpec((2 * H, cfg.lstm_bottleneck), dt,
+                                ("lstm_hidden", "bottleneck"), "lecun"),
+        "softmax_w": ParamSpec((cfg.lstm_bottleneck, cfg.vocab), dt,
+                               ("bottleneck", "vocab"), "normal", 0.02),
+        "softmax_b": ParamSpec((cfg.vocab,), "float32", ("vocab",), "zeros"),
+    }
+
+
+def forward(cfg, params, features, *, kernel_impl: str = "jax"):
+    """features: (B, T, input_dim) -> logits (B, T, vocab)."""
+    x = features.astype(jnp.bfloat16)
+    for i in range(cfg.n_layers):
+        p = params["layers"][f"layer_{i}"]
+        fwd = lstm_layer(p["fwd"], x, kernel_impl=kernel_impl)
+        bwd = lstm_layer(p["bwd"], x, reverse=True, kernel_impl=kernel_impl)
+        x = jnp.concatenate([fwd, bwd], axis=-1)
+    x = jnp.einsum("btd,dk->btk", x, params["bottleneck"])
+    logits = (jnp.einsum("btk,kv->btv", x, params["softmax_w"])
+              .astype(jnp.float32) + params["softmax_b"])
+    return logits
+
+
+def loss_train(cfg, params, batch, *, kernel_impl: str = "jax"):
+    logits = forward(cfg, params, batch["features"], kernel_impl=kernel_impl)
+    return cross_entropy(logits, batch["labels"])

@@ -1,0 +1,130 @@
+"""Mixture-of-experts FFN with two TPU-idiomatic router implementations.
+
+``dispatch`` — GShard/Switch-style capacity routing: tokens are grouped,
+top-k experts chosen per token, and a one-hot dispatch/combine einsum moves
+token activations to experts.  With experts sharded over the 'data' mesh
+axis this lowers to the classic all-to-all expert-parallel pattern
+(llama4-scout: 16 experts over the 16-way data axis).
+
+``dense`` — compute every expert for every token and mask to the top-k.
+Exact (no token dropping) and MXU-friendly when experts are tiny
+(granite-moe: d_ff_expert=512, 40 experts); the dispatch one-hot overhead
+would dominate there.  See DESIGN.md §MoE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import gelu
+from repro.sharding import ParamSpec
+
+
+def moe_param_specs(cfg):
+    m = cfg.moe
+    d, ff, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    dt = cfg.param_dtype
+    p = {
+        "router": ParamSpec((d, E), "float32", ("embed", "experts"), "lecun"),
+        "wi": ParamSpec((E, d, ff), dt, ("experts", "embed", "expert_mlp"), "lecun"),
+        "wg": ParamSpec((E, d, ff), dt, ("experts", "embed", "expert_mlp"), "lecun"),
+        "wo": ParamSpec((E, ff, d), dt, ("experts", "expert_mlp", "embed"), "lecun"),
+    }
+    if m.shared_expert:
+        sff = m.shared_d_ff
+        p["shared_wi"] = ParamSpec((d, sff), dt, ("embed", "mlp"), "lecun")
+        p["shared_wg"] = ParamSpec((d, sff), dt, ("embed", "mlp"), "lecun")
+        p["shared_wo"] = ParamSpec((sff, d), dt, ("mlp", "embed"), "lecun")
+    return p
+
+
+def _expert_ffn(p, xe, act: str):
+    """xe: (E, g, cap, d) -> (E, g, cap, d); per-expert SwiGLU/GELU."""
+    h = jnp.einsum("egcd,edf->egcf", xe, p["wi"])
+    if act == "swiglu":
+        g = jnp.einsum("egcd,edf->egcf", xe, p["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = gelu(h)
+    return jnp.einsum("egcf,efd->egcd", h, p["wo"])
+
+
+def _aux_loss(probs, expert_mask, num_experts):
+    """Switch-transformer load-balance loss, per group then averaged.
+    probs: (g, s, E); expert_mask: (g, s, E) in {0,1} (any-k membership)."""
+    density = jnp.mean(expert_mask.astype(jnp.float32), axis=1)     # (g, E)
+    density_proxy = jnp.mean(probs, axis=1)                          # (g, E)
+    return jnp.mean(density * density_proxy) * (num_experts ** 2)
+
+
+def moe_apply(cfg, p, x):
+    """x: (B, S, d).  Returns (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    # largest divisor of T that fits the configured routing group
+    g_sz = min(m.router_group, T)
+    while T % g_sz:
+        g_sz -= 1
+    n_g = T // g_sz
+    xg = x.reshape(n_g, g_sz, d)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, m.top_k)                  # (g,s,k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(top_idx, m.num_experts, dtype=jnp.float32)
+    aux = _aux_loss(probs, jnp.max(onehot, axis=2), m.num_experts)
+
+    if m.router_impl == "dense":
+        # weight per (token, expert): sum of top-k weights where selected
+        w_te = jnp.einsum("gsk,gske->gse", top_w, onehot)            # (g,s,E)
+
+        fused = getattr(cfg, "moe_dense_fused", False)
+
+        def group(xs):
+            xg_, wg_ = xs
+            h = jnp.einsum("sd,edf->esf", xg_, p["wi"])
+            if cfg.act == "swiglu":
+                gate = jnp.einsum("sd,edf->esf", xg_, p["wg"])
+                h = jax.nn.silu(gate) * h
+            else:
+                h = gelu(h)
+            if fused:
+                # §Perf: weight the hidden activations by the router and
+                # contract (experts, ff) jointly — the partial sum under an
+                # ff-sharded wo is then only (s, d) instead of (E, s, d).
+                hw = h * wg_.T[:, :, None].astype(h.dtype)
+                return jnp.einsum("esf,efd->sd", hw, p["wo"])
+            ye = jnp.einsum("esf,efd->esd", h, p["wo"])
+            return jnp.einsum("esd,se->sd", ye, wg_.astype(ye.dtype))
+
+        y = jax.lax.map(jax.checkpoint(group), (xg, w_te))
+    else:
+        cap = int(g_sz * m.top_k * m.capacity_factor / m.num_experts)
+        cap = max(cap, 1)
+        # position of each (token, k) slot inside its expert's buffer,
+        # priority by (token, k) order within the group (GShard).
+        flat = onehot.reshape(n_g, g_sz * m.top_k, m.num_experts)
+        pos = jnp.cumsum(flat, axis=1) - flat                        # (g,s*k,E)
+        pos = pos.reshape(n_g, g_sz, m.top_k, m.num_experts)
+        in_cap = (pos < cap).astype(jnp.float32) * onehot            # keep mask
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        # dispatch: (g, s, E, cap); combine adds router weights
+        dispatch = jnp.einsum("gske,gskec->gsec", in_cap, pos_oh)
+        combine = jnp.einsum("gsk,gske,gskec->gsec", top_w, in_cap, pos_oh)
+
+        xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xg)
+        ye = _expert_ffn(p, xe, cfg.act)
+        y = jnp.einsum("gsec,egcd->gsd", combine.astype(ye.dtype), ye)
+
+    y = y.reshape(B, S, d)
+    if m.shared_expert:
+        h = jnp.einsum("bsd,df->bsf", x, p["shared_wi"])
+        if cfg.act == "swiglu":
+            h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["shared_wg"])) * h
+        else:
+            h = gelu(h)
+        y = y + jnp.einsum("bsf,fd->bsd", h, p["shared_wo"])
+    return y, aux

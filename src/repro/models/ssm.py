@@ -1,0 +1,256 @@
+"""Mamba-2 SSD (state-space duality) block, chunked for TPU.
+
+The sequence path uses the SSD chunked algorithm [arXiv:2405.21060 §6]:
+within-chunk interactions are a small quadratic "attention-like" matmul
+(MXU-friendly), across-chunk state is a first-order recurrence carried by
+``lax.scan``.  The chunk loop is the unit the Pallas kernel in
+``repro.kernels.ssd_scan`` tiles into VMEM; this module is also its oracle
+via ``repro.kernels.ref``.
+
+Decode keeps (conv window, SSM state) per layer: O(1) per token, which is
+what makes ``long_500k`` native for ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rmsnorm
+from repro.sharding import ParamSpec
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def ssm_param_specs(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H = ssm_dims(cfg)
+    GN = s.n_groups * s.state_dim
+    dt = cfg.param_dtype
+    W = s.conv_width
+    return {
+        "wz": ParamSpec((d, d_inner), dt, ("embed", "ssm_inner"), "lecun"),
+        "wx": ParamSpec((d, d_inner), dt, ("embed", "ssm_inner"), "lecun"),
+        "wB": ParamSpec((d, GN), dt, ("embed", "ssm_state"), "lecun"),
+        "wC": ParamSpec((d, GN), dt, ("embed", "ssm_state"), "lecun"),
+        "wdt": ParamSpec((d, H), dt, ("embed", "ssm_heads"), "lecun"),
+        "conv_x": ParamSpec((W, d_inner), "float32", (None, "ssm_inner"), "lecun"),
+        "conv_B": ParamSpec((W, GN), "float32", (None, "ssm_state"), "lecun"),
+        "conv_C": ParamSpec((W, GN), "float32", (None, "ssm_state"), "lecun"),
+        "dt_bias": ParamSpec((H,), "float32", ("ssm_heads",), "zeros"),
+        "A_log": ParamSpec((H,), "float32", ("ssm_heads",), "small_a_log"),
+        "D": ParamSpec((H,), "float32", ("ssm_heads",), "ones"),
+        "norm_scale": ParamSpec((d_inner,), "float32", ("ssm_inner",), "ones"),
+        "out": ParamSpec((d_inner, d), dt, ("ssm_inner", "embed"), "lecun"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv_seq(x, kernel):
+    """x: (B,S,C); kernel: (W,C) depthwise; causal (left) padding."""
+    W = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # sum of shifted slices — W is tiny (4), unrolled adds beat conv lowering
+    S = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i:i + S, :].astype(jnp.float32) * kernel[i]
+    return out.astype(x.dtype)
+
+
+def causal_conv_step(buf, xt, kernel):
+    """buf: (B,W-1,C) previous inputs; xt: (B,C).  Returns (new_buf, yt)."""
+    W = kernel.shape[0]
+    window = jnp.concatenate([buf, xt[:, None, :]], axis=1)          # (B,W,C)
+    yt = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), kernel)
+    return window[:, 1:, :], yt.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """SSD over a full sequence.
+
+    x:  (B,S,H,P)   inputs per SSM head
+    dt: (B,S,H)     discretization steps (softplus'ed, f32)
+    A:  (H,)        negative continuous-time decay
+    Bm: (B,S,H,N)   input matrix (groups already broadcast to heads)
+    Cm: (B,S,H,N)   output matrix
+    Returns (y (B,S,H,P), final_state (B,H,N,P) f32).
+    """
+    B, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    pad = (-S) % Q
+    if pad:
+        # zero-dt padding is exact: dt=0 tokens contribute nothing to the
+        # state (dtA=0 -> decay 1, input weight 0); padded y is sliced off
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        x, dt, Bm, Cm = zp(x), zp(dt), zp(Bm), zp(Cm)
+        S = S + pad
+    nc = S // Q
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(B, nc, Q, *a.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = map(to_chunks, (x, dt, Bm, Cm))
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, Pd), jnp.float32)
+
+    @jax.checkpoint
+    def body(h, inp):
+        x_, dt_, B_, C_ = inp                       # (B,Q,...)
+        dtA = dt_ * A                               # (B,Q,H) f32, negative
+        cum = jnp.cumsum(dtA, axis=1)               # (B,Q,H)
+        # ---- intra-chunk (quadratic within the chunk)
+        scores = jnp.einsum("bqhn,bkhn->bhqk",
+                            C_.astype(jnp.bfloat16), B_.astype(jnp.bfloat16))
+        # mask the EXPONENT (not the exp) — exp(cum_q - cum_k) overflows to
+        # inf for masked q<k entries and NaN-poisons the backward pass
+        diff = cum[:, :, None, :] - cum[:, None, :, :]               # (B,q,k,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+        w = scores.astype(jnp.float32) * jnp.moveaxis(decay, 3, 1)   # (B,H,q,k)
+        y = jnp.einsum("bhqk,bkh,bkhp->bqhp",
+                       w.astype(jnp.bfloat16),
+                       dt_.astype(jnp.bfloat16),
+                       x_.astype(jnp.bfloat16))
+        # ---- inter-chunk (state from previous chunks)
+        out_decay = jnp.exp(cum)                                     # (B,Q,H)
+        y = y + jnp.einsum("bqhn,bhnp,bqh->bqhp",
+                           C_.astype(jnp.float32), h, out_decay
+                           ).astype(y.dtype)
+        # ---- state update
+        last = cum[:, -1:, :]                                        # (B,1,H)
+        in_decay = jnp.exp(last - cum) * dt_                         # (B,Q,H)
+        S_c = jnp.einsum("bkhn,bkh,bkhp->bhnp",
+                         B_.astype(jnp.float32), in_decay,
+                         x_.astype(jnp.float32))
+        h = jnp.exp(last[:, 0, :])[:, :, None, None] * h + S_c
+        return h, y
+
+    h_final, ys = jax.lax.scan(body, h0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, Pd)
+    return y[:, :S_orig], h_final
+
+
+def ssd_step(h, xt, dtt, A, Bt, Ct):
+    """One decode step.  h: (B,H,N,P) f32; xt: (B,H,P); dtt: (B,H);
+    Bt/Ct: (B,H,N).  Returns (h', yt)."""
+    dA = jnp.exp(dtt * A)                                            # (B,H)
+    dBx = jnp.einsum("bhn,bh,bhp->bhnp", Bt.astype(jnp.float32),
+                     dtt, xt.astype(jnp.float32))
+    h = dA[:, :, None, None] * h + dBx
+    yt = jnp.einsum("bhn,bhnp->bhp", Ct.astype(jnp.float32), h)
+    return h, yt.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 block
+# ---------------------------------------------------------------------------
+
+def _projections(cfg, p, x):
+    s = cfg.ssm
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"])
+    xi = jnp.einsum("bsd,di->bsi", x, p["wx"])
+    Bp = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cp = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wdt"])
+    return z, xi, Bp, Cp, dt_raw
+
+
+def _broadcast_groups(cfg, a, H):
+    """(B,S,G*N) -> (B,S,H,N) by repeating groups across their heads."""
+    s = cfg.ssm
+    B_, S_ = a.shape[:2]
+    a = a.reshape(B_, S_, s.n_groups, s.state_dim)
+    reps = H // s.n_groups
+    return jnp.repeat(a, reps, axis=2)
+
+
+def mamba2_seq(cfg, p, x, *, kernel_impl: str = "jax"):
+    """Full-sequence mamba2 block.  x: (B,S,d) -> (y, (conv_state, ssm_state))."""
+    s = cfg.ssm
+    d_inner, H = ssm_dims(cfg)
+    B_, S_, _ = x.shape
+    z, xi, Bp, Cp, dt_raw = _projections(cfg, p, x)
+    xi_c = jax.nn.silu(causal_conv_seq(xi, p["conv_x"]))
+    Bp_c = jax.nn.silu(causal_conv_seq(Bp, p["conv_B"]))
+    Cp_c = jax.nn.silu(causal_conv_seq(Cp, p["conv_C"]))
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])                      # f32
+    A = -jnp.exp(p["A_log"])
+    xh = xi_c.reshape(B_, S_, H, s.head_dim)
+    Bh = _broadcast_groups(cfg, Bp_c, H)
+    Ch = _broadcast_groups(cfg, Cp_c, H)
+    if kernel_impl == "pallas":
+        from repro.kernels.ops import ssd as ssd_op
+        y, h_final = ssd_op(xh, dt, A, Bh, Ch, chunk=s.chunk)
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, Bh, Ch, s.chunk)
+    y = y + (p["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B_, S_, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, p["out"])
+    # decode-ready states: last conv_width-1 pre-activation conv inputs
+    W = s.conv_width
+    conv_state = {
+        "x": xi[:, S_ - (W - 1):, :],
+        "B": Bp[:, S_ - (W - 1):, :],
+        "C": Cp[:, S_ - (W - 1):, :],
+    }
+    return out, (conv_state, h_final)
+
+
+def mamba2_step(cfg, p, xt, conv_state, h):
+    """One-token decode.  xt: (B,1,d) -> (y (B,1,d), new states)."""
+    s = cfg.ssm
+    d_inner, H = ssm_dims(cfg)
+    z, xi, Bp, Cp, dt_raw = _projections(cfg, p, xt)
+    sq = lambda a: a[:, 0, :]
+    cs_x, xi_t = causal_conv_step(conv_state["x"], sq(xi), p["conv_x"])
+    cs_B, Bp_t = causal_conv_step(conv_state["B"], sq(Bp), p["conv_B"])
+    cs_C, Cp_t = causal_conv_step(conv_state["C"], sq(Cp), p["conv_C"])
+    xi_t, Bp_t, Cp_t = map(jax.nn.silu, (xi_t, Bp_t, Cp_t))
+    dt = jax.nn.softplus(sq(dt_raw) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    B_ = xt.shape[0]
+    xh = xi_t.reshape(B_, H, s.head_dim)
+    Bh = _broadcast_groups(cfg, Bp_t[:, None, :], H)[:, 0]
+    Ch = _broadcast_groups(cfg, Cp_t[:, None, :], H)[:, 0]
+    h, yt = ssd_step(h, xh, dt, A, Bh, Ch)
+    yt = yt + (p["D"][:, None] * xh.astype(jnp.float32)).astype(yt.dtype)
+    yt = yt.reshape(B_, 1, d_inner)
+    yt = rmsnorm(yt * jax.nn.silu(z.astype(jnp.float32)).astype(yt.dtype),
+                 p["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", yt, p["out"])
+    return out, ({"x": cs_x, "B": cs_B, "C": cs_C}, h)
+
+
+def ssm_cache_specs(cfg, batch: int):
+    """ParamSpec-shaped description of per-layer decode state."""
+    s = cfg.ssm
+    d_inner, H = ssm_dims(cfg)
+    GN = s.n_groups * s.state_dim
+    W = s.conv_width
+    mk = lambda shape, axes, dtype="bfloat16": ParamSpec(shape, dtype, axes)
+    return {
+        "conv": {
+            "x": mk((batch, W - 1, d_inner), ("batch", None, "ssm_inner")),
+            "B": mk((batch, W - 1, GN), ("batch", None, "ssm_state")),
+            "C": mk((batch, W - 1, GN), ("batch", None, "ssm_state")),
+        },
+        "h": mk((batch, H, s.state_dim, s.head_dim),
+                ("batch", "ssm_heads", "ssm_state", None), "float32"),
+    }

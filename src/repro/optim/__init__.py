@@ -1,0 +1,6 @@
+from repro.optim.optimizers import adam, momentum, sgd, Optimizer  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    paper_recipe,
+    warmup_then_anneal,
+)

@@ -1,0 +1,85 @@
+"""Minimal functional optimizers.
+
+The paper's recipe is plain mini-batch SGD (Eq. 5) — no momentum state —
+which is also what keeps per-learner replica memory at 1× params for the
+decentralized strategies.  Momentum and Adam are provided for the
+beyond-paper experiments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable            # params -> opt_state
+    update: Callable          # (grads, opt_state, params, lr) -> (new_params, opt_state)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(
+            lambda w, g: (w.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(w.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        state = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            step_dir = jax.tree.map(
+                lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        else:
+            step_dir = state
+        new = jax.tree.map(
+            lambda w, d: (w.astype(jnp.float32) - lr * d).astype(w.dtype),
+            params, step_dir)
+        return new, state
+
+    return Optimizer("momentum", init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda w: jnp.zeros(w.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda w, m_, v_: (w.astype(jnp.float32)
+                               - lr * (m_ / bc1)
+                               / (jnp.sqrt(v_ / bc2) + eps)).astype(w.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer("adam", init, update)
+
+
+def get_optimizer(name: str) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name]()

@@ -1,0 +1,40 @@
+"""Learning-rate schedules.
+
+``paper_recipe`` reproduces §V of the paper: distributed runs start at the
+single-GPU base LR (0.1) and *linearly warm up* to the large-batch LR over
+the first 10 epochs, then anneal by 1/sqrt(2) every epoch — the standard
+large-batch warm-up the paper credits for convergence at batch 2560-8192.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_then_anneal(base_lr: float, peak_lr: float, warmup_steps: int,
+                       anneal_every: int, anneal_factor: float):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr + (peak_lr - base_lr) * jnp.minimum(
+            step / max(warmup_steps, 1), 1.0)
+        n_anneals = jnp.floor(
+            jnp.maximum(step - warmup_steps, 0.0) / max(anneal_every, 1))
+        return warm * jnp.power(anneal_factor, n_anneals)
+
+    return sched
+
+
+def paper_recipe(steps_per_epoch: int, base_lr: float = 0.1,
+                 peak_lr: float = 1.0):
+    """§V: warm up linearly from 0.1 to 1.0 over 10 epochs, then multiply by
+    1/sqrt(2) each epoch."""
+    return warmup_then_anneal(
+        base_lr, peak_lr,
+        warmup_steps=10 * steps_per_epoch,
+        anneal_every=steps_per_epoch,
+        anneal_factor=float(1.0 / np.sqrt(2.0)),
+    )

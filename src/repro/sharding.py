@@ -1,0 +1,199 @@
+"""Logical-axis sharding rules (t5x/MaxText style), with divisibility-aware
+fallback chains so that one rule set covers all 10 assigned architectures.
+
+Every parameter/activation dimension carries a *logical* axis name
+('heads', 'mlp', 'batch', ...).  :class:`MeshRules` maps logical axes to
+mesh axes; each logical axis has an ordered candidate list and the first
+unused mesh axis that evenly divides the dimension wins.  This is what lets
+e.g. phi-3 (40 heads, not divisible by the 16-way model axis) fall through
+to sharding ``head_dim`` instead, while command-r (64 heads) shards heads
+directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+def default_rules(*, fsdp: bool = False, expert_axis: str = "",
+                  learner_axis: str = "data") -> dict:
+    """Logical-axis -> ordered mesh-axis candidates.
+
+    ``learner_axis`` is where decentralized learner replicas live: the
+    'data' axis on a single pod, the 'pod' axis for the H-ring multi-pod
+    configuration (paper §V HPC setting).
+    """
+    rules = {
+        # the decentralized-SGD learner-replica dimension (paper Eq. 14)
+        "learner": (learner_axis,),
+        # parameters
+        "vocab": ("model",),
+        "embed": ("data",) if fsdp else (),
+        "mlp": ("model",),
+        # Attention weights replicate over 'model': none of the assigned
+        # GQA configs has heads (or per-group heads) divisible by the 16-way
+        # model axis, and sharding the contracting head_dim turns every
+        # score matmul into a giant partial-sum all-reduce (observed in the
+        # prototype HLO).  Attention COMPUTE is model-sharded on the decode
+        # path via cache_seq below, and via sequence-parallel constraints in
+        # the perf pass (EXPERIMENTS.md §Perf).
+        "heads": (),
+        "kv_heads": (),
+        "head_dim": (),
+        "qkv": (),
+        "experts": (expert_axis,) if expert_axis else (),
+        "expert_mlp": ("model",),
+        "ssm_heads": ("model",),
+        "ssm_inner": ("model",),
+        "ssm_state": (),
+        "conv_dim": (),
+        "layers": (),
+        "lstm_hidden": ("model",),
+        "lstm_gates": ("model",),
+        "feature": (),
+        "bottleneck": (),
+        # activations
+        "batch": ("data",),
+        "seq": (),
+        # decode KV caches shard their time axis over 'model' (flash-decode
+        # style partial softmax), and over model×data for the B=1 long
+        # context shape.
+        "cache_seq": (("model", "data"), "model", "data"),
+        "frames": (),
+        None: (),
+    }
+    return rules
+
+
+def multipod_rules(*, fsdp: bool = False, expert_axis: str = "") -> dict:
+    """Multi-pod mesh ('pod','data','model'): learners ride the pod axis
+    (H-ring super-learners), batch shards over pod×data, FSDP over data."""
+    rules = default_rules(fsdp=fsdp, expert_axis=expert_axis,
+                          learner_axis="pod")
+    rules["batch"] = ("data",)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# MeshRules
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MeshRules:
+    mesh: Mesh
+    rules: dict
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape[name]
+
+    def spec(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
+        """Greedy left-to-right assignment: each mesh axis used at most once
+        per spec; a candidate must evenly divide the dimension."""
+        assert len(shape) == len(axes), (shape, axes)
+        out = [None] * len(shape)
+        used = set()
+        for i, (n, ax) in enumerate(zip(shape, axes)):
+            for cand in self.rules.get(ax, ()):
+                if not cand:
+                    continue
+                group = cand if isinstance(cand, tuple) else (cand,)
+                size = 1
+                for a in group:
+                    size *= self.axis_size(a)
+                if used.isdisjoint(group) and n % size == 0:
+                    out[i] = cand
+                    used.update(group)
+                    break
+        return P(*out)
+
+    def sharding(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    def sds(self, shape, dtype, axes) -> jax.ShapeDtypeStruct:
+        """ShapeDtypeStruct stand-in for the dry-run (no allocation)."""
+        return jax.ShapeDtypeStruct(
+            tuple(shape), dtype, sharding=self.sharding(shape, axes)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Shape + dtype + logical axes + init recipe for one parameter."""
+
+    shape: tuple
+    dtype: str = "bfloat16"
+    axes: tuple = ()
+    init: str = "normal"      # normal | zeros | ones | lecun | small_a_log
+    init_scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec_tree_to_sds(spec_tree, mesh_rules: MeshRules,
+                     extra_leading: tuple = ()):
+    """Map a tree of ParamSpec to ShapeDtypeStructs.
+
+    ``extra_leading`` prepends (size, logical_axis) dims — used to add the
+    learner-replica dimension of decentralized strategies.
+    """
+    def one(ps: ParamSpec):
+        shape = tuple(s for s, _ in extra_leading) + ps.shape
+        axes = tuple(a for _, a in extra_leading) + ps.axes
+        return mesh_rules.sds(shape, ps.dtype, axes)
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_tree_shardings(spec_tree, mesh_rules: MeshRules,
+                        extra_leading: tuple = ()):
+    def one(ps: ParamSpec):
+        shape = tuple(s for s, _ in extra_leading) + ps.shape
+        axes = tuple(a for _, a in extra_leading) + ps.axes
+        return mesh_rules.sharding(shape, axes)
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_param(ps: ParamSpec, key) -> jax.Array:
+    import jax.numpy as jnp
+
+    dtype = jnp.dtype(ps.dtype)
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, dtype)
+    if ps.init == "small_a_log":
+        # mamba2 A_log init: A in [1, 16) -> log
+        u = jax.random.uniform(key, ps.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if ps.init == "lecun":
+        fan_in = ps.shape[0] if len(ps.shape) >= 1 else 1
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, ps.shape, jnp.float32) * scale).astype(dtype)
+    return (jax.random.normal(key, ps.shape, jnp.float32) * ps.init_scale).astype(dtype)
+
+
+def init_spec_tree(spec_tree, key):
+    """Materialize a ParamSpec tree into real arrays (smoke tests/examples)."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [init_param(ps, k) for ps, k in zip(leaves, keys)]
+    )

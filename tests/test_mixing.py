@@ -1,0 +1,77 @@
+"""Property tests (hypothesis) for the mixing-matrix core (paper Eq. 14)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing
+
+SIZES = st.integers(min_value=1, max_value=12)
+
+
+@given(SIZES)
+@settings(max_examples=25, deadline=None)
+def test_ring_matrix_doubly_stochastic(L):
+    assert mixing.is_doubly_stochastic(mixing.ring_matrix(L))
+
+
+@given(SIZES)
+@settings(max_examples=25, deadline=None)
+def test_uniform_matrix_doubly_stochastic(L):
+    assert mixing.is_doubly_stochastic(mixing.uniform_matrix(L))
+
+
+@given(st.integers(min_value=2, max_value=8))
+@settings(max_examples=10, deadline=None)
+def test_ring_powers_reach_consensus(L):
+    """T^n -> T_u: the Markov chain of T_1 is irreducible+aperiodic (§IV-C)."""
+    T = mixing.ring_matrix(L)
+    Tn = np.linalg.matrix_power(T, 512)
+    assert np.allclose(Tn, mixing.uniform_matrix(L), atol=1e-4)
+
+
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=5),
+       st.sampled_from(["ring", "uniform"]))
+@settings(max_examples=20, deadline=None)
+def test_mixing_preserves_replica_mean(L, dim, kind):
+    """Doubly-stochastic mixing conserves the consensus average — the
+    invariant that makes decentralized SGD unbiased."""
+    rng = np.random.default_rng(L * 100 + dim)
+    w = {"a": jnp.asarray(rng.normal(size=(L, dim)), jnp.float32)}
+    mixed = mixing.get_mixer(kind)(w)
+    np.testing.assert_allclose(np.mean(np.asarray(mixed["a"]), axis=0),
+                               np.mean(np.asarray(w["a"]), axis=0),
+                               atol=1e-5)
+
+
+@given(st.integers(min_value=3, max_value=10))
+@settings(max_examples=10, deadline=None)
+def test_mix_ring_equals_matrix_form(L):
+    """Collective-form ring mixing == explicit W·T_1 (row convention)."""
+    rng = np.random.default_rng(L)
+    w = {"a": jnp.asarray(rng.normal(size=(L, 7)), jnp.float32)}
+    fast = mixing.mix_ring(w)["a"]
+    ref = mixing.mix_matrix(w, mixing.ring_matrix(L))["a"]
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(ref), atol=1e-5)
+
+
+def test_mix_uniform_equals_matrix_form():
+    rng = np.random.default_rng(0)
+    w = {"a": jnp.asarray(rng.normal(size=(6, 4)), jnp.float32)}
+    fast = mixing.mix_uniform(w)["a"]
+    ref = mixing.mix_matrix(w, mixing.uniform_matrix(6))["a"]
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(ref), atol=1e-5)
+
+
+@given(st.integers(min_value=2, max_value=8))
+@settings(max_examples=10, deadline=None)
+def test_consensus_contraction(L):
+    """One ring-mixing round strictly contracts consensus distance."""
+    from repro.core.strategies import consensus_distance
+
+    rng = np.random.default_rng(L)
+    w = {"a": jnp.asarray(rng.normal(size=(L, 16)), jnp.float32)}
+    before = float(consensus_distance(w))
+    after = float(consensus_distance(mixing.mix_ring(w)))
+    assert after <= before + 1e-6

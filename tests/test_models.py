@@ -1,0 +1,215 @@
+"""Model-zoo correctness: smoke per arch family + prefill/decode consistency
++ MoE routing equivalence + sliding-window semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_REGISTRY, get_arch
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.sharding import ParamSpec, init_spec_tree
+
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 64
+
+
+def synth_inputs(cfg, model, mode, seq=S):
+    shape = ShapeConfig("t", seq, B, mode)
+    specs = model.input_specs(shape, mode)
+
+    def mk(ps):
+        if ps.dtype == "int32":
+            if ps.shape == ():
+                return jnp.int32(seq // 2)
+            return jax.random.randint(RNG, ps.shape, 0,
+                                      min(cfg.vocab, 100), jnp.int32)
+        return jax.random.normal(RNG, ps.shape, jnp.float32).astype(ps.dtype)
+
+    return jax.tree.map(mk, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    out = {}
+    for name in sorted(ARCH_REGISTRY):
+        cfg = get_arch(name).reduced()
+        model = build_model(cfg)
+        params = init_spec_tree(model.param_specs(), RNG)
+        out[name] = (cfg, model, params)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# smoke: every arch trains one step with finite loss (deliverable f)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ARCH_REGISTRY))
+def test_arch_smoke_train(zoo, name):
+    cfg, model, params = zoo[name]
+    batch = synth_inputs(cfg, model, "train")
+    loss, g = jax.value_and_grad(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss)), name
+    gn = sum(float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+             for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0, name
+
+
+@pytest.mark.parametrize("name", [n for n in sorted(ARCH_REGISTRY)
+                                  if ARCH_REGISTRY[n].family != "lstm"])
+def test_arch_smoke_decode_shapes(zoo, name):
+    cfg, model, params = zoo[name]
+    pb = synth_inputs(cfg, model, "prefill")
+    logits, cache = model.prefill_fn(params, pb, cache_len=S)
+    assert logits.shape[-1] == cfg.vocab
+    tok = jnp.zeros((B, 1), jnp.int32)
+    lg, cache2 = model.decode_fn(params, cache, tok, jnp.int32(S // 2))
+    assert lg.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(lg.astype(jnp.float32)).all()), name
+
+
+# ---------------------------------------------------------------------------
+# prefill -> decode == teacher forcing (the serving path is exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["smollm-360m", "granite-moe-3b-a800m",
+                                  "mamba2-370m", "hymba-1.5b",
+                                  "llama4-scout-17b-a16e"])
+def test_prefill_decode_consistency(zoo, name):
+    """decode(tokens[:t], then token t) logits == prefill(tokens[:t+1])'s
+    last-position logits.
+
+    For capacity-routed MoE the comparison requires no-drop capacity:
+    grouped prefill may drop tokens that a solo decode step serves — the
+    documented GShard trade-off (see test_moe_capacity_drops_tokens)."""
+    cfg, model, params = zoo[name]
+    if cfg.moe is not None and cfg.moe.router_impl == "dispatch":
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+        model = build_model(cfg)
+    T = 32
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T + 1), 0,
+                              cfg.vocab, jnp.int32)
+    # ground truth: prefill over t+1 tokens
+    full, _ = model.prefill_fn(params, {"tokens": toks}, cache_len=T + 1)
+    # serving path: prefill t tokens, decode token t at position t
+    part, cache = model.prefill_fn(params, {"tokens": toks[:, :T]},
+                                   cache_len=T + 1)
+    lg, _ = model.decode_fn(params, cache, toks[:, T:T + 1], jnp.int32(T))
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0], np.float32),
+        np.asarray(full[:, -1], np.float32), atol=0.11, rtol=0.11)
+
+
+def test_prefill_decode_consistency_encdec(zoo):
+    cfg, model, params = zoo["whisper-large-v3"]
+    T = 16
+    frames = jax.random.normal(jax.random.PRNGKey(4), (B, T, cfg.d_model),
+                               jnp.float32).astype(jnp.bfloat16)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, T + 1), 0,
+                              cfg.vocab, jnp.int32)
+    full, _ = model.prefill_fn(
+        params, {"frames": frames, "tokens": toks}, cache_len=T + 1)
+    part, cache = model.prefill_fn(
+        params, {"frames": frames, "tokens": toks[:, :T]}, cache_len=T + 1)
+    lg, _ = model.decode_fn(params, cache, toks[:, T:T + 1], jnp.int32(T))
+    np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               atol=0.11, rtol=0.11)
+
+
+def test_multistep_decode_matches_teacher_forcing(zoo):
+    cfg, model, params = zoo["smollm-360m"]
+    T, extra = 24, 4
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, T + extra), 0,
+                              cfg.vocab, jnp.int32)
+    full, _ = model.prefill_fn(params, {"tokens": toks},
+                               cache_len=T + extra)
+    _, cache = model.prefill_fn(params, {"tokens": toks[:, :T]},
+                                cache_len=T + extra)
+    for i in range(extra):
+        lg, cache = model.decode_fn(params, cache, toks[:, T + i:T + i + 1],
+                                    jnp.int32(T + i))
+    np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               atol=0.15, rtol=0.15)
+
+
+# ---------------------------------------------------------------------------
+# MoE: dispatch (capacity) routing == dense routing when nothing drops
+# ---------------------------------------------------------------------------
+
+def test_moe_dispatch_matches_dense_at_high_capacity():
+    from repro.models.moe import moe_apply, moe_param_specs
+
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    cfg_disp = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, router_impl="dispatch",
+                                     capacity_factor=float(cfg.moe.num_experts)))
+    cfg_dense = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, router_impl="dense"))
+    p = init_spec_tree(moe_param_specs(cfg), jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    y1, aux1 = moe_apply(cfg_disp, p, x)
+    y2, aux2 = moe_apply(cfg_dense, p, x)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=0.06,
+                               rtol=0.06)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """At tiny capacity the dispatch path must differ (tokens dropped) but
+    stay finite — the documented GShard behaviour."""
+    from repro.models.moe import moe_apply, moe_param_specs
+
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    cfg_tiny = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, router_impl="dispatch",
+                                     capacity_factor=0.25))
+    p = init_spec_tree(moe_param_specs(cfg), jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    y, aux = moe_apply(cfg_tiny, p, x)
+    assert bool(jnp.isfinite(y.astype(jnp.float32)).all())
+
+
+# ---------------------------------------------------------------------------
+# sliding windows
+# ---------------------------------------------------------------------------
+
+def test_window_masks_attention():
+    from repro.kernels.ref import attention_ref
+    from repro.models.attention import attn_seq
+
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 128, 2, 16))
+    out = attn_seq(q, k, v, causal=True, window=jnp.int32(16), q_chunk=32)
+    expect = attention_ref(q, k, v, causal=True, window=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_layer_windows_global_override():
+    from repro.models.transformer import layer_windows, GLOBAL_WINDOW
+
+    cfg = get_arch("hymba-1.5b")
+    ws = layer_windows(cfg, 1 << 16)
+    assert ws[0] == GLOBAL_WINDOW and ws[15] == GLOBAL_WINDOW \
+        and ws[31] == GLOBAL_WINDOW
+    assert ws[1] == cfg.window
+
+
+def test_long_context_variant_uses_window_for_long():
+    from repro.models.transformer import layer_windows, GLOBAL_WINDOW
+
+    cfg = get_arch("phi3-medium-14b")
+    assert layer_windows(cfg, 1 << 16)[0] == GLOBAL_WINDOW
+    assert layer_windows(cfg, 1 << 16, long_context=True)[0] == \
+        cfg.window_for_long

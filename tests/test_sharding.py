@@ -1,0 +1,119 @@
+"""Sharding-rule logic (pure; no big meshes needed) + hypothesis sweeps."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import MeshRules, ParamSpec, default_rules, multipod_rules
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by MeshRules.spec."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def rules(mesh=POD, **kw):
+    mk = multipod_rules if "pod" in mesh.shape else default_rules
+    return MeshRules(mesh, mk(**kw))
+
+
+def test_mlp_sharded_on_model():
+    assert rules().spec((5120, 17920), ("embed", "mlp")) == P(None, "model")
+
+
+def test_vocab_sharded():
+    assert rules().spec((100352, 5120), ("vocab", "embed")) == \
+        P("model", None)
+
+
+def test_attention_weights_replicated():
+    # baseline policy: no assigned arch has heads divisible by 16
+    assert rules().spec((5120, 40, 128), ("embed", "heads", "head_dim")) == \
+        P(None, None, None)
+
+
+def test_indivisible_dim_falls_through():
+    # 40 heads % 16 != 0 -> unsharded even if the rule suggested 'model'
+    r = MeshRules(POD, {"heads": ("model",)})
+    assert r.spec((40,), ("heads",)) == P(None)
+    assert r.spec((64,), ("heads",)) == P("model")
+
+
+def test_axis_used_once_per_spec():
+    r = MeshRules(POD, {"a": ("model",), "b": ("model",)})
+    assert r.spec((32, 32), ("a", "b")) == P("model", None)
+
+
+def test_multi_axis_candidate_cache_seq():
+    r = rules()
+    # decode_32k: batch takes data, cache_seq falls back to model alone
+    spec = r.spec((40, 128, 32768, 8, 128),
+                  ("layers", "batch", "cache_seq", "kv_heads", "head_dim"))
+    assert spec == P(None, "data", "model", None, None)
+    # long_500k: batch=1 unshardable -> cache_seq gets model+data combined
+    spec = r.spec((40, 1, 524288, 8, 128),
+                  ("layers", "batch", "cache_seq", "kv_heads", "head_dim"))
+    assert spec == P(None, None, ("model", "data"), None, None)
+
+
+def test_learner_axis_single_vs_multipod():
+    lead = ((16, "learner"), )
+    r1 = rules()
+    assert r1.spec((16, 256, 4096), ("learner", "batch", "seq")) == \
+        P("data", None, None)
+    r2 = rules(MULTI)
+    assert r2.spec((2, 128, 4096), ("learner", "batch", "seq")) == \
+        P("pod", "data", None)
+
+
+def test_fsdp_rules_shard_embed_dim():
+    r = rules(fsdp=True)
+    assert r.spec((5120, 8192), ("embed", "mlp")) == P("data", "model")
+
+
+def test_expert_axis():
+    r = rules(expert_axis="data")
+    assert r.spec((16, 5120, 8192), ("experts", "embed", "expert_mlp")) == \
+        P("data", None, "model")
+
+
+@given(st.lists(st.sampled_from([1, 2, 3, 16, 32, 40, 64, 100, 256]),
+                min_size=1, max_size=4),
+       st.lists(st.sampled_from(["embed", "mlp", "vocab", "heads", "batch",
+                                 "cache_seq", "experts", None]),
+                min_size=1, max_size=4))
+@settings(max_examples=100, deadline=None)
+def test_spec_always_valid(dims, axes):
+    """Property: any (shape, axes) yields a spec whose sharded dims divide
+    evenly and which uses each mesh axis at most once."""
+    n = min(len(dims), len(axes))
+    dims, axes = tuple(dims[:n]), tuple(axes[:n])
+    r = rules()
+    spec = r.spec(dims, axes)
+    used = []
+    for d, s in zip(dims, spec):
+        if s is None:
+            continue
+        group = s if isinstance(s, tuple) else (s,)
+        size = int(np.prod([POD.shape[a] for a in group]))
+        assert d % size == 0
+        used += list(group)
+    assert len(used) == len(set(used))
+
+
+def test_spec_tree_to_sds_with_leading():
+    from repro.sharding import spec_tree_to_sds
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    r = MeshRules(mesh, default_rules())
+    tree = {"w": ParamSpec((8, 4), "float32", ("embed", "mlp"))}
+    sds = spec_tree_to_sds(tree, r, extra_leading=((2, "learner"),))
+    assert sds["w"].shape == (2, 8, 4)
