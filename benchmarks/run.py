@@ -56,6 +56,45 @@ def _kernel_microbench():
         rows.append((f"kernels/{name}", (time.perf_counter() - t0) / 5 * 1e6,
                      "us/call cpu"))
 
+    # fused (B)LSTM kernel: jax scan vs pallas interpret, fwd and fwd+bwd,
+    # on reduced shapes — relative trajectory tracking for the training
+    # hot path (real TPU numbers come from the compiled kernel).
+    from repro.kernels.lstm_cell import blstm_sequence
+
+    B, T, D, H = 4, 8, 16, 16
+    wxf, whf = (jax.random.normal(key, (D, 4 * H)) * 0.3,
+                jax.random.normal(key, (H, 4 * H)) * 0.3)
+    wxb, whb = (jax.random.normal(key, (D, 4 * H)) * 0.3,
+                jax.random.normal(key, (H, 4 * H)) * 0.3)
+    bf = bb = jnp.zeros((4 * H,), jnp.float32)
+    xl = jax.random.normal(key, (B, T, D), jnp.float32)
+
+    def _loss(fn):
+        def loss(wxf, whf, bf, wxb, whb, bb, x):
+            return jnp.mean(jnp.square(fn(wxf, whf, bf, wxb, whb, bb,
+                                          x).astype(jnp.float32)))
+        return loss
+
+    pallas_fwd = lambda *a: blstm_sequence(*a, interpret=True)
+    grad_ref = jax.value_and_grad(_loss(ref.blstm_ref),
+                                  argnums=tuple(range(7)))
+    grad_pl = jax.value_and_grad(_loss(pallas_fwd), argnums=tuple(range(7)))
+    args = (wxf, whf, bf, wxb, whb, bb, xl)
+    # operands passed as jit ARGUMENTS (not closed-over constants) so XLA
+    # cannot constant-fold the measured work away at compile time
+    for name, fn in (
+        ("lstm_fwd_jax", jax.jit(ref.blstm_ref)),
+        ("lstm_fwd_pallas_interp", jax.jit(pallas_fwd)),
+        ("lstm_fwd_bwd_jax", jax.jit(grad_ref)),
+        ("lstm_fwd_bwd_pallas_interp", jax.jit(grad_pl)),
+    ):
+        fn(*args)  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn(*args))
+        rows.append((f"kernels/{name}", (time.perf_counter() - t0) / 5 * 1e6,
+                     "us/call cpu"))
+
     x = jax.random.normal(key, (2, 1024, 8, 64), jnp.float32)
     dt = jax.nn.softplus(jax.random.normal(key, (2, 1024, 8)))
     A = -jnp.exp(jax.random.normal(key, (8,)) * 0.5)

@@ -90,6 +90,10 @@ class ArchConfig:
     lstm_hidden: int = 0      # per-direction hidden size
     lstm_bottleneck: int = 0
     input_dim: int = 0        # acoustic feature dim (paper: 260)
+    # Pallas LSTM kernel knobs (repro.kernels.lstm_cell): batch tile of
+    # the (B//bB, T) grid; 0 -> auto-picked from the VMEM budget.
+    lstm_block_b: int = 0
+    lstm_vmem_budget_mb: int = 12
 
     # distribution defaults (see repro/core/strategies.py and DESIGN.md)
     train_strategy: str = "sd_psgd"   # sc_psgd | sd_psgd | ad_psgd | bmuf | hring

@@ -24,6 +24,12 @@ SWB2000_BLSTM = register(
         lstm_hidden=512,       # per direction
         lstm_bottleneck=256,
         input_dim=260,
+        # Pallas BLSTM kernel: one direction's weights + f32 gradient
+        # accumulators are ~9.5MB resident in the backward, so the
+        # training batch tile auto-tunes to bB=64 at the 12MB budget
+        # (see kernels/lstm_cell.py docstring for the byte math).
+        lstm_block_b=0,        # 0 -> auto from the VMEM budget
+        lstm_vmem_budget_mb=12,
         # frame classifier: no autoregressive decode step
         skip_shapes=("prefill_32k", "decode_32k", "long_500k"),
         train_strategy="ad_psgd",

@@ -1,86 +1,527 @@
-"""Pallas TPU fused LSTM sequence kernel (the paper's compute hot-spot).
+"""Pallas TPU fused (B)LSTM sequence kernels — the training hot path.
 
-The paper's acoustic model spends its time in 6 bi-LSTM layers (Table I:
-165MB model, 0.07 s/batch on a P100).  A time-step of LSTM is two skinny
-matmuls plus elementwise gates — dominated by weight re-reads from HBM if
-each step round-trips.  The TPU adaptation keeps BOTH weight matrices and
-the recurrent (h, c) state resident in VMEM across the whole unroll and
-walks time on the sequential grid axis, so HBM traffic per step is just
-x_t in / h_t out:
+The paper's acoustic model spends essentially all of its compute in 6
+bi-LSTM layers (Table I: 165MB model, 0.07 s/batch); every distributed
+strategy in §IV only pays off if this per-learner step is fast.  A
+time-step of LSTM is two skinny matmuls plus elementwise gates —
+dominated by weight re-reads from HBM if each step round-trips.  The TPU
+adaptation keeps the weight matrices and the recurrent (h, c) state
+resident in VMEM across the whole unroll and walks time on the inner
+sequential grid axis, so HBM traffic per step is just x_t in / h_t out:
 
-  grid = (T,);  VMEM blocks: x_t (B,D), Wx (D,4H), Wh (H,4H); scratch h,c.
+  grid = (B//bB, T);  VMEM blocks per direction:
+      x_t (bB, D), Wx (D, 4H), Wh (H, 4H), b (4H,); scratch h, c (bB, H).
+
+The batch axis is tiled with ``block_b`` (``bB``): the time axis is the
+*inner* (fastest-varying) grid axis so each batch tile walks the whole
+recurrence with its own resident (h, c) carry before the grid moves to
+the next tile — an outer-batch grid would need every tile's state live
+at once and defeat the tiling.  Batches that are not a multiple of
+``block_b`` are zero-padded up front and sliced after; padded rows never
+pollute weight gradients because their output cotangents are zero.
 
 Gate layout (i|f|g|o) matches ``repro.models.lstm.lstm_cell_step``, which
 is the oracle via ``repro.kernels.ref.lstm_ref`` (forget-gate bias +1).
 
-For the paper's shape (D=260, H=512, 4H=2048) everything fits easily:
-Wx+Wh ≈ 0.8M params ≈ 1.6MB bf16, per-step state B×H×8B ≈ 1MB at B=256.
+Three kernel variants share one body (``_make_fwd_kernel``):
+
+* inference forward (``stash=False``) — emits h_t only;
+* training forward (``stash=True``) — additionally stashes the
+  post-activation gates (bB, 4H) and cell states (bB, H) per step, f32;
+* bidirectional fusion (``n_dir=2``) — both directions advance in one
+  grid pass (forward direction at time t, reverse direction at T-1-t),
+  with both weight sets resident in VMEM and x handed to the kernel
+  once; per-direction math is op-for-op identical to the ``n_dir=1``
+  kernel, so the fused output is bit-identical to two separate calls.
+
+Backward pass (``_make_bwd_kernel``)
+------------------------------------
+Wired via ``jax.custom_vjp`` so ``jax.value_and_grad`` through
+``models/lstm.loss_train(kernel_impl="pallas")`` works end-to-end.  The
+backward kernel walks the time grid in *reverse recurrence order*,
+carrying (dh, dc) in VMEM scratch and accumulating dWx (D, 4H),
+dWh (H, 4H) and db (4H,) in f32 VMEM-resident output blocks (constant
+index maps — the block is zeroed at the first grid program and flushed
+once at the end), while emitting dx_t per step.  h_{t-1} is re-read from
+the stashed forward output y (the value that actually entered the
+recurrent matmul, post bf16 rounding), c_{t-1}/c_t from the stashed cell
+states, and the gate nonlinearities come from the stashed activations —
+only tanh(c_t) is recomputed.
+
+Residual stashing vs recompute
+------------------------------
+We stash post-activation gates + cell states in f32:
+4H + H = 5H floats per (row, step) — for the paper shape
+(B=256, T=21, H=512) that is 256*21*5*512*4B ≈ 55MB HBM per direction,
+written once in the forward and read once in the backward.  The
+alternative — recomputing gates in the backward — saves that HBM
+traffic but re-runs both matmuls (2/3 of the step FLOPs) and still has
+to stash or recompute the cell-state sequence for df/dc; on TPU the
+matmul units are the scarce resource for this skinny shape, so we trade
+HBM capacity for MXU time (same choice cuDNN makes).  Revisit if T
+grows beyond a few hundred frames (then a seq-chunked recompute —
+stash c every K steps, recompute gates within a chunk — wins).
+
+VMEM budget and ``block_b`` auto-tuning
+---------------------------------------
+``auto_block_b`` picks the largest power-of-two batch tile whose
+resident set fits ``vmem_budget`` (default 12MB of a 16MB v5e core),
+estimating the worse of the two training kernels:
+
+  stashing fwd:  n_dir * (D*4H + H*4H + 4H) * itemsize   (weights)
+                 + 2 * n_dir * bB * (D + H) * itemsize   (x/y streams)
+                 + n_dir * 2 * bB * H * 4                (h, c carries)
+                 + 2 * n_dir * bB * 5H * 4               (stash blocks)
+  backward (one direction at a time):
+                 (D*4H + H*4H + 4H) * (itemsize + 4)     (weights +
+                                                          f32 dW accum)
+                 + streamed dy/stash/x/dx blocks + (dh, dc) carries
+
+For the paper shape (D=260, H=512, bf16) one direction's weights plus
+its f32 gradient accumulators already cost ~9.5MB, so training at
+B=256 auto-tiles to bB=64 at the 12MB default (bB=8 floor under 10MB);
+pure inference holds both directions' weights in 6.3MB and fits
+bB=256 outright.  A single tile never pads past the 8-row sublane
+multiple (B=96 runs as one 96-row tile, not a padded 128-row one).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+DEFAULT_VMEM_BUDGET = 12 * 2 ** 20
 
-def _lstm_kernel(x_ref, wx_ref, wh_ref, b_ref, o_ref, h_ref, c_ref):
-    """One time step.  x_ref: (B, D); o_ref: (B, H); scratch h/c: (B, H)."""
-    t = pl.program_id(0)
 
-    @pl.when(t == 0)
-    def _init():
-        h_ref[...] = jnp.zeros_like(h_ref)
-        c_ref[...] = jnp.zeros_like(c_ref)
+def _resolve_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
-    x = x_ref[...]
-    h = h_ref[...]
-    gates = (
-        jax.lax.dot_general(x, wx_ref[...], (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-        + jax.lax.dot_general(h.astype(x.dtype), wh_ref[...],
-                              (((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.float32)
-        + b_ref[...][None, :]
-    )
-    H = h_ref.shape[-1]
-    i = gates[:, 0 * H:1 * H]
-    f = gates[:, 1 * H:2 * H]
-    g = gates[:, 2 * H:3 * H]
-    o = gates[:, 3 * H:4 * H]
-    c = (jax.nn.sigmoid(f + 1.0) * c_ref[...]
-         + jax.nn.sigmoid(i) * jnp.tanh(g))
-    h_new = jax.nn.sigmoid(o) * jnp.tanh(c)
-    c_ref[...] = c
-    h_ref[...] = h_new
-    o_ref[...] = h_new.astype(o_ref.dtype)
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def auto_block_b(B: int, D: int, H: int, itemsize: int, *, n_dir: int = 1,
+                 training: bool = False, vmem_budget: int = None) -> int:
+    """Largest power-of-two batch tile whose resident set fits the VMEM
+    budget (see module docstring for the byte math).  Floors at 8 rows
+    (the f32 sublane tile) even when the budget is overrun — at that
+    point the weights themselves are the problem, not the tile."""
+    budget = vmem_budget or DEFAULT_VMEM_BUDGET
+    wparams = D * 4 * H + H * 4 * H + 4 * H
+
+    def usage(bb):
+        weights = n_dir * wparams * itemsize
+        streamed = 2 * n_dir * bb * (D + H) * itemsize
+        carries = n_dir * 2 * bb * H * 4
+        if not training:
+            return weights + streamed + carries
+        # worst single-kernel resident set of the training pair:
+        # (a) stashing forward — all directions' weights + f32 gate/cell
+        #     stash blocks;  (b) backward — runs ONE direction at a time:
+        #     that direction's weights + its f32 dWx/dWh/db accumulators
+        #     + the streamed dy/stash/x/dx blocks + (dh, dc) carries.
+        fwd = weights + streamed + carries + 2 * n_dir * bb * 5 * H * 4
+        bwd = (wparams * (itemsize + 4)
+               + 2 * bb * (D + H) * itemsize
+               + 2 * bb * (5 * H + H) * 4
+               + 2 * bb * H * 4)
+        return max(fwd, bwd)
+
+    bb = max(8, 1 << (max(B, 1) - 1).bit_length())
+    while bb > 8 and usage(bb) > budget:
+        bb //= 2
+    if bb >= B:
+        # single tile: don't pad past the sublane multiple (B=96 should
+        # run as one 96-row tile, not a zero-padded 128-row one)
+        bb = max(8, _round_up(B, 8))
+    return bb
+
+
+def _pad_rows(a, Bp):
+    B = a.shape[0]
+    if B == Bp:
+        return a
+    return jnp.pad(a, ((0, Bp - B),) + ((0, 0),) * (a.ndim - 1))
+
+
+def _tile(x, n_dir: int, H: int, block_b, vmem_budget, *, training: bool):
+    """The single source of the (block_b, padded_B) pair.  The stashing
+    forward and the backward wrapper both derive the tile through here
+    with ``training=True`` and identical arguments, so the backward's
+    grid covers exactly the rows the forward padded (``_run_bwd``
+    asserts the invariant)."""
+    if block_b is not None and block_b < 0:
+        raise ValueError(f"block_b must be positive or 0/None (auto), "
+                         f"got {block_b}")
+    B, _, D = x.shape
+    bb = block_b or auto_block_b(B, D, H, jnp.dtype(x.dtype).itemsize,
+                                 n_dir=n_dir, training=training,
+                                 vmem_budget=vmem_budget)
+    return bb, _round_up(B, bb)
+
+
+# ---------------------------------------------------------------------------
+# forward kernels (inference / training-with-stash, uni- or bidirectional)
+# ---------------------------------------------------------------------------
+
+def _make_fwd_kernel(n_dir: int, stash: bool):
+    """Kernel body over refs laid out as:
+
+    inputs:  x * n_dir, then (wx, wh, b) * n_dir
+    outputs: y * n_dir, then (acts, cseq) * n_dir if ``stash``
+    scratch: (h, c) * n_dir
+    """
+    n_out = n_dir * (3 if stash else 1)
+
+    def kernel(*refs):
+        x_refs = refs[:n_dir]
+        w_refs = refs[n_dir:4 * n_dir]
+        out_refs = refs[4 * n_dir:4 * n_dir + n_out]
+        scr_refs = refs[4 * n_dir + n_out:]
+        t = pl.program_id(1)
+
+        for d in range(n_dir):
+            wx_ref, wh_ref, b_ref = w_refs[3 * d:3 * d + 3]
+            h_ref, c_ref = scr_refs[2 * d:2 * d + 2]
+
+            @pl.when(t == 0)
+            def _init(h_ref=h_ref, c_ref=c_ref):
+                h_ref[...] = jnp.zeros_like(h_ref)
+                c_ref[...] = jnp.zeros_like(c_ref)
+
+            x = x_refs[d][...]
+            h = h_ref[...]
+            gates = (
+                jax.lax.dot_general(x, wx_ref[...], (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+                + jax.lax.dot_general(h.astype(x.dtype), wh_ref[...],
+                                      (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+                + b_ref[...][None, :]
+            )
+            H = h_ref.shape[-1]
+            i = jax.nn.sigmoid(gates[:, 0 * H:1 * H])
+            f = jax.nn.sigmoid(gates[:, 1 * H:2 * H] + 1.0)
+            g = jnp.tanh(gates[:, 2 * H:3 * H])
+            o = jax.nn.sigmoid(gates[:, 3 * H:4 * H])
+            c = f * c_ref[...] + i * g
+            h_new = o * jnp.tanh(c)
+            c_ref[...] = c
+            h_ref[...] = h_new
+            out_refs[d][...] = h_new.astype(out_refs[d].dtype)
+            if stash:
+                acts_ref = out_refs[n_dir + 2 * d]
+                cseq_ref = out_refs[n_dir + 2 * d + 1]
+                acts_ref[...] = jnp.concatenate([i, f, g, o], axis=-1)
+                cseq_ref[...] = c
+
+    return kernel
+
+
+def _xmap(T: int, reverse: bool):
+    if reverse:
+        return lambda ib, t: (ib, T - 1 - t, 0)
+    return lambda ib, t: (ib, t, 0)
+
+
+def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret):
+    """Run the forward kernel for one or two directions in one grid pass.
+
+    ws: ((wx, wh, b), ...) per direction; revs: matching reverse flags.
+    Returns (outs, bb): outs is the flat pallas output list over the
+    *padded* batch (y per direction, then (acts, cseq) pairs if stash).
+    """
+    B, T, D = x.shape
+    H = ws[0][1].shape[0]
+    n_dir = len(ws)
+    bb, Bp = _tile(x, n_dir, H, block_b, vmem_budget, training=stash)
+    xp = _pad_rows(x, Bp)
+    grid = (Bp // bb, T)
+
+    operands, in_specs = [], []
+    for rev in revs:
+        operands.append(xp)
+        in_specs.append(pl.BlockSpec((bb, None, D), _xmap(T, rev)))
+    for wx, wh, b in ws:
+        operands += [wx, wh, b]
+        in_specs += [
+            pl.BlockSpec((D, 4 * H), lambda ib, t: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda ib, t: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda ib, t: (0,)),
+        ]
+
+    out_specs = [pl.BlockSpec((bb, None, H), _xmap(T, rev)) for rev in revs]
+    out_shape = [jax.ShapeDtypeStruct((Bp, T, H), x.dtype) for _ in revs]
+    if stash:
+        for rev in revs:
+            out_specs += [pl.BlockSpec((bb, None, 4 * H), _xmap(T, rev)),
+                          pl.BlockSpec((bb, None, H), _xmap(T, rev))]
+            out_shape += [jax.ShapeDtypeStruct((Bp, T, 4 * H), jnp.float32),
+                          jax.ShapeDtypeStruct((Bp, T, H), jnp.float32)]
+
+    scratch = []
+    for _ in revs:
+        scratch += [pltpu.VMEM((bb, H), jnp.float32),
+                    pltpu.VMEM((bb, H), jnp.float32)]
+
+    outs = pl.pallas_call(
+        _make_fwd_kernel(n_dir, stash),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=_resolve_interpret(interpret),
+    )(*operands)
+    return list(outs), bb
+
+
+# ---------------------------------------------------------------------------
+# backward kernel (one direction; the BLSTM VJP runs it once per direction)
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(dy_ref, acts_ref, c_ref, cprev_ref, hprev_ref, x_ref,
+                wx_ref, wh_ref, dx_ref, dwx_ref, dwh_ref, db_ref,
+                dh_ref, dc_ref):
+    """One reverse-recurrence step.  Grid (B//bB, T); grid axis 1 walks
+    the recurrence backwards (index maps reverse time), carrying (dh, dc)
+    in scratch and accumulating dWx/dWh/db into constant-mapped f32
+    output blocks that stay VMEM-resident for the whole grid."""
+    ib = pl.program_id(0)
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init_carry():
+        dh_ref[...] = jnp.zeros_like(dh_ref)
+        dc_ref[...] = jnp.zeros_like(dc_ref)
+
+    @pl.when((r == 0) & (ib == 0))
+    def _init_accum():
+        dwx_ref[...] = jnp.zeros_like(dwx_ref)
+        dwh_ref[...] = jnp.zeros_like(dwh_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    # the last grid step is the *first* step of the original recurrence:
+    # its h_{t-1}/c_{t-1} are the zero initial state, not array values
+    boundary = r == pl.num_programs(1) - 1
+    H = dh_ref.shape[-1]
+    acts = acts_ref[...]
+    i = acts[:, 0 * H:1 * H]
+    f = acts[:, 1 * H:2 * H]
+    g = acts[:, 2 * H:3 * H]
+    o = acts[:, 3 * H:4 * H]
+    c = c_ref[...]
+    zero = jnp.zeros_like(c)
+    c_prev = jnp.where(boundary, zero, cprev_ref[...])
+    h_prev = jnp.where(boundary, zero, hprev_ref[...].astype(jnp.float32))
+
+    dh = dy_ref[...].astype(jnp.float32) + dh_ref[...]
+    tc = jnp.tanh(c)
+    dc = dh * o * (1.0 - tc * tc) + dc_ref[...]
+    dgates = jnp.concatenate([
+        dc * g * i * (1.0 - i),          # d pre-act input gate
+        dc * c_prev * f * (1.0 - f),     # d pre-act forget gate
+        dc * i * (1.0 - g * g),          # d pre-act cell candidate
+        dh * tc * o * (1.0 - o),         # d pre-act output gate
+    ], axis=-1)
+
+    wx = wx_ref[...].astype(jnp.float32)
+    wh = wh_ref[...].astype(jnp.float32)
+    dx_ref[...] = jax.lax.dot_general(
+        dgates, wx, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(dx_ref.dtype)
+    dh_ref[...] = jax.lax.dot_general(
+        dgates, wh, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dc_ref[...] = dc * f
+
+    x = x_ref[...].astype(jnp.float32)
+    dwx_ref[...] += jax.lax.dot_general(
+        x, dgates, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dwh_ref[...] += jax.lax.dot_general(
+        h_prev, dgates, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    db_ref[...] += jnp.sum(dgates, axis=0)
+
+
+def _bwd_tmap(T: int, reverse: bool):
+    """Time index of the step grid position r processes (reverse
+    recurrence order: the forward direction walks T-1..0)."""
+    if reverse:
+        return lambda ib, r: (ib, r, 0)
+    return lambda ib, r: (ib, T - 1 - r, 0)
+
+
+def _bwd_pmap(T: int, reverse: bool):
+    """Time index of the *previous* recurrence step (clamped at the
+    boundary; the kernel zeroes the value there)."""
+    if reverse:
+        return lambda ib, r: (ib, jnp.minimum(r + 1, T - 1), 0)
+    return lambda ib, r: (ib, jnp.maximum(T - 2 - r, 0), 0)
+
+
+def _run_bwd(wx, wh, xp, yp, acts, cseq, dyp, *, reverse: bool, bb: int,
+             interpret):
+    """Backward kernel over padded arrays -> (dxp, dwx, dwh, db), f32
+    weight grads (caller casts to param dtypes)."""
+    Bp, T, D = xp.shape
+    H = wh.shape[0]
+    assert Bp % bb == 0, (Bp, bb)   # forward/backward tile lockstep
+    grid = (Bp // bb, T)
+    tmap = _bwd_tmap(T, reverse)
+    pmap = _bwd_pmap(T, reverse)
+
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, None, H), tmap),          # dy_t
+            pl.BlockSpec((bb, None, 4 * H), tmap),      # stashed gates_t
+            pl.BlockSpec((bb, None, H), tmap),          # c_t
+            pl.BlockSpec((bb, None, H), pmap),          # c_{t-1}
+            pl.BlockSpec((bb, None, H), pmap),          # h_{t-1} (= y)
+            pl.BlockSpec((bb, None, D), tmap),          # x_t
+            pl.BlockSpec((D, 4 * H), lambda ib, r: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda ib, r: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, None, D), tmap),
+            pl.BlockSpec((D, 4 * H), lambda ib, r: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda ib, r: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda ib, r: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, T, D), xp.dtype),
+            jax.ShapeDtypeStruct((D, 4 * H), jnp.float32),
+            jax.ShapeDtypeStruct((H, 4 * H), jnp.float32),
+            jax.ShapeDtypeStruct((4 * H,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb, H), jnp.float32),
+            pltpu.VMEM((bb, H), jnp.float32),
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(dyp, acts, cseq, cseq, yp, xp, wx, wh)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP wiring: unidirectional
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _lstm_vjp(static, wx, wh, b, x):
+    reverse, interpret, block_b, vmem_budget = static
+    outs, _ = _run_fwd(((wx, wh, b),), x, (reverse,), stash=False,
+                       block_b=block_b, vmem_budget=vmem_budget,
+                       interpret=interpret)
+    return outs[0][:x.shape[0]]
+
+
+def _lstm_vjp_fwd(static, wx, wh, b, x):
+    reverse, interpret, block_b, vmem_budget = static
+    outs, _ = _run_fwd(((wx, wh, b),), x, (reverse,), stash=True,
+                       block_b=block_b, vmem_budget=vmem_budget,
+                       interpret=interpret)
+    yp, acts, cseq = outs
+    return yp[:x.shape[0]], (wx, wh, b, x, yp, acts, cseq)
+
+
+def _lstm_vjp_bwd(static, res, dy):
+    reverse, interpret, block_b, vmem_budget = static
+    wx, wh, b, x, yp, acts, cseq = res
+    B = x.shape[0]
+    bb, Bp = _tile(x, 1, wh.shape[0], block_b, vmem_budget, training=True)
+    assert Bp == yp.shape[0], (Bp, yp.shape)
+    dxp, dwx, dwh, db = _run_bwd(
+        wx, wh, _pad_rows(x, Bp), yp, acts, cseq, _pad_rows(dy, Bp),
+        reverse=reverse, bb=bb, interpret=interpret)
+    return (dwx.astype(wx.dtype), dwh.astype(wh.dtype),
+            db.astype(b.dtype), dxp[:B].astype(x.dtype))
+
+
+_lstm_vjp.defvjp(_lstm_vjp_fwd, _lstm_vjp_bwd)
 
 
 def lstm_sequence(wx, wh, b, x, *, reverse: bool = False,
-                  interpret: bool = None):
-    """x: (B, T, D) -> (B, T, H); weights wx (D,4H), wh (H,4H), b (4H,)."""
-    B, T, D = x.shape
-    H = wh.shape[0]
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+                  interpret: bool = None, block_b: int = None,
+                  vmem_budget: int = None):
+    """x: (B, T, D) -> (B, T, H); weights wx (D,4H), wh (H,4H), b (4H,).
 
-    def x_map(t):
-        return (0, (T - 1 - t) if reverse else t, 0)
+    Differentiable (custom VJP; see module docstring).  ``block_b``
+    tiles the batch (None -> :func:`auto_block_b`)."""
+    return _lstm_vjp((bool(reverse), interpret, block_b, vmem_budget),
+                     wx, wh, b, x)
 
-    return pl.pallas_call(
-        _lstm_kernel,
-        grid=(T,),
-        in_specs=[
-            pl.BlockSpec((B, None, D), x_map),
-            pl.BlockSpec((D, 4 * H), lambda t: (0, 0)),
-            pl.BlockSpec((H, 4 * H), lambda t: (0, 0)),
-            pl.BlockSpec((4 * H,), lambda t: (0,)),
-        ],
-        out_specs=pl.BlockSpec((B, None, H), x_map),
-        out_shape=jax.ShapeDtypeStruct((B, T, H), x.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((B, H), jnp.float32),
-            pltpu.VMEM((B, H), jnp.float32),
-        ],
-        interpret=interpret,
-    )(x, wx, wh, b)
+
+# ---------------------------------------------------------------------------
+# custom-VJP wiring: fused bidirectional
+# ---------------------------------------------------------------------------
+
+_BLSTM_REVS = (False, True)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _blstm_vjp(static, wxf, whf, bf, wxb, whb, bb_, x):
+    interpret, block_b, vmem_budget = static
+    outs, _ = _run_fwd(((wxf, whf, bf), (wxb, whb, bb_)), x, _BLSTM_REVS,
+                       stash=False, block_b=block_b,
+                       vmem_budget=vmem_budget, interpret=interpret)
+    B = x.shape[0]
+    return jnp.concatenate([outs[0][:B], outs[1][:B]], axis=-1)
+
+
+def _blstm_vjp_fwd(static, wxf, whf, bf, wxb, whb, bb_, x):
+    interpret, block_b, vmem_budget = static
+    outs, _ = _run_fwd(((wxf, whf, bf), (wxb, whb, bb_)), x, _BLSTM_REVS,
+                       stash=True, block_b=block_b,
+                       vmem_budget=vmem_budget, interpret=interpret)
+    yf, yb, acts_f, cseq_f, acts_b, cseq_b = outs
+    B = x.shape[0]
+    y = jnp.concatenate([yf[:B], yb[:B]], axis=-1)
+    return y, (wxf, whf, bf, wxb, whb, bb_, x,
+               yf, acts_f, cseq_f, yb, acts_b, cseq_b)
+
+
+def _blstm_vjp_bwd(static, res, dy):
+    interpret, block_b, vmem_budget = static
+    (wxf, whf, bf, wxb, whb, bb_, x,
+     yf, acts_f, cseq_f, yb, acts_b, cseq_b) = res
+    B = x.shape[0]
+    H = whf.shape[0]
+    bb, Bp = _tile(x, 2, H, block_b, vmem_budget, training=True)
+    assert Bp == yf.shape[0], (Bp, yf.shape)
+    xp = _pad_rows(x, Bp)
+    dyf = _pad_rows(dy[..., :H], Bp)
+    dyb = _pad_rows(dy[..., H:], Bp)
+    dxf, dwxf, dwhf, dbf = _run_bwd(wxf, whf, xp, yf, acts_f, cseq_f, dyf,
+                                    reverse=False, bb=bb,
+                                    interpret=interpret)
+    dxb, dwxb, dwhb, dbb = _run_bwd(wxb, whb, xp, yb, acts_b, cseq_b, dyb,
+                                    reverse=True, bb=bb,
+                                    interpret=interpret)
+    dx = (dxf.astype(jnp.float32) + dxb.astype(jnp.float32))[:B]
+    return (dwxf.astype(wxf.dtype), dwhf.astype(whf.dtype),
+            dbf.astype(bf.dtype), dwxb.astype(wxb.dtype),
+            dwhb.astype(whb.dtype), dbb.astype(bb_.dtype),
+            dx.astype(x.dtype))
+
+
+_blstm_vjp.defvjp(_blstm_vjp_fwd, _blstm_vjp_bwd)
+
+
+def blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x, *,
+                   interpret: bool = None, block_b: int = None,
+                   vmem_budget: int = None):
+    """Fused bidirectional layer: x (B, T, D) -> (B, T, 2H) with the
+    forward-direction output in [..., :H] and the time-reversed
+    direction in [..., H:] — one kernel invocation, both weight sets
+    resident, bit-identical to two :func:`lstm_sequence` calls."""
+    return _blstm_vjp((interpret, block_b, vmem_budget),
+                      wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x)

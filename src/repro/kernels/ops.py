@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lstm_cell import blstm_sequence as _blstm_sequence
 from repro.kernels.lstm_cell import lstm_sequence as _lstm_sequence
 from repro.kernels.moe_dense import moe_dense as _moe_dense
 from repro.kernels.ssd_scan import ssd as _ssd
@@ -26,9 +27,19 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
                            q_offset=q_offset)
 
 
-@functools.partial(jax.jit, static_argnames=("reverse",))
-def lstm_sequence(wx, wh, b, x, *, reverse: bool = False):
-    return _lstm_sequence(wx, wh, b, x, reverse=reverse)
+@functools.partial(jax.jit, static_argnames=("reverse", "block_b",
+                                             "vmem_budget"))
+def lstm_sequence(wx, wh, b, x, *, reverse: bool = False,
+                  block_b: int = None, vmem_budget: int = None):
+    return _lstm_sequence(wx, wh, b, x, reverse=reverse, block_b=block_b,
+                          vmem_budget=vmem_budget)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "vmem_budget"))
+def blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x, *,
+                   block_b: int = None, vmem_budget: int = None):
+    return _blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
+                           block_b=block_b, vmem_budget=vmem_budget)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

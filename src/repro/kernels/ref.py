@@ -56,6 +56,14 @@ def lstm_ref(wx, wh, b, x, *, reverse: bool = False):
     return jnp.moveaxis(hs, 0, 1)
 
 
+def blstm_ref(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x):
+    """Oracle for kernels.lstm_cell.blstm_sequence: the two directions run
+    separately and concatenate on the feature axis."""
+    return jnp.concatenate(
+        [lstm_ref(wx_fwd, wh_fwd, b_fwd, x),
+         lstm_ref(wx_bwd, wh_bwd, b_bwd, x, reverse=True)], axis=-1)
+
+
 def ssd_ref(x, dt, A, Bm, Cm):
     """Exact token-by-token SSM recurrence.
 

@@ -15,24 +15,41 @@ axis in the H-ring multi-pod configuration.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on the mesh
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: every mesh axis is implicitly 'auto'
+    AxisType = None
 
 from repro.sharding import MeshRules, default_rules, multipod_rules
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` on new jax,
+    the Mesh object's own context manager on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over the locally available devices (CPU tests/examples)."""
     n = len(jax.devices())
     data = min(data, n)
-    return jax.make_mesh((data, max(n // data, 1))[:2], ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((data, max(n // data, 1))[:2], ("data", "model"))
 
 
 def rules_for(cfg, mesh, *, multi_pod: bool = False) -> MeshRules:

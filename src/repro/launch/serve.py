@@ -41,7 +41,10 @@ def scatter_slot(pool, row, slot):
 
 
 class Server:
-    def __init__(self, cfg, *, slots: int, max_len: int, seed: int = 0):
+    def __init__(self, cfg, *, slots: int, max_len: int, seed: int = 0,
+                 kernel_impl: str = "jax"):
+        # kernel_impl reaches prefill only: decode_fn is a one-token step
+        # with no pallas variant (tracked in ROADMAP.md open items)
         assert cfg.supports_decode and cfg.family != "encdec", \
             "demo server covers decoder-only families"
         self.cfg = cfg
@@ -67,7 +70,8 @@ class Server:
 
         self._jit_prefill = jax.jit(
             lambda params, batch: self.model.prefill_fn(
-                params, batch, cache_len=max_len))
+                params, batch, cache_len=max_len,
+                kernel_impl=kernel_impl))
         self._jit_decode = jax.jit(
             lambda params, cache, tok, pos: self.model.decode_fn(
                 params, cache, tok, pos))
@@ -125,13 +129,19 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--kernel-impl", default="jax",
+                    choices=["jax", "pallas"],
+                    help="kernel implementation for PREFILL only; the "
+                         "one-token decode loop has no pallas path yet "
+                         "and always runs the jax kernels")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     rng = np.random.default_rng(0)
-    server = Server(cfg, slots=args.slots, max_len=args.max_len)
+    server = Server(cfg, slots=args.slots, max_len=args.max_len,
+                    kernel_impl=args.kernel_impl)
     pending = [(i, rng.integers(0, cfg.vocab, size=args.prompt_len))
                for i in range(args.requests)]
     finished, t0, steps = [], time.time(), 0

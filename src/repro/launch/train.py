@@ -28,7 +28,8 @@ from repro.configs import get_arch
 from repro.core import strategies as ST
 from repro.data import make_dataset
 from repro.data.pipeline import Prefetcher
-from repro.launch.mesh import make_local_mesh, make_production_mesh, rules_for
+from repro.launch.mesh import (make_local_mesh, make_production_mesh,
+                               rules_for, use_mesh)
 from repro.models import build_model
 from repro.optim.optimizers import get_optimizer
 from repro.optim.schedules import paper_recipe, warmup_then_anneal
@@ -65,7 +66,7 @@ def setup_training(cfg, mesh, *, strategy_name: str = None,
     lead = ((n_learners, "learner"),) if strategy.replicated else ()
     param_shardings = spec_tree_shardings(pspecs, rules, extra_leading=lead)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = init_spec_tree(pspecs, jax.random.PRNGKey(seed))
         if strategy.replicated:
             params = ST.stack_for_learners(params, n_learners)
@@ -98,12 +99,24 @@ def main(argv=None):
     ap.add_argument("--consensus", action="store_true")
     ap.add_argument("--kernel-impl", default="jax",
                     choices=["jax", "pallas"])
+    ap.add_argument("--block-b", type=int, default=0,
+                    help="Pallas LSTM batch tile (0 = auto from VMEM)")
+    ap.add_argument("--vmem-budget-mb", type=int, default=0,
+                    help="VMEM budget for kernel auto-tiling (0 = cfg)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.block_b or args.vmem_budget_mb:
+        import dataclasses
+        changes = {}
+        if args.block_b:
+            changes["lstm_block_b"] = args.block_b
+        if args.vmem_budget_mb:
+            changes["lstm_vmem_budget_mb"] = args.vmem_budget_mb
+        cfg = dataclasses.replace(cfg, **changes)
     seq_len = args.seq_len or (21 if cfg.family == "lstm" else 128)
     n_learners = args.learners if args.learners is not None else cfg.n_learners
     strategy = ST.get_strategy(args.strategy or cfg.train_strategy)
@@ -135,7 +148,7 @@ def main(argv=None):
     ds = make_dataset(cfg, seq_len=seq_len, batch=batch, seed=args.seed)
     pf = Prefetcher(ds, start_step=start)
     t0 = time.time()
-    with jax.set_mesh(meta["mesh"]):
+    with use_mesh(meta["mesh"]):
         for k in range(start, args.steps):
             batch_np = pf.next()
             state, metrics = jit_step(state, batch_np)

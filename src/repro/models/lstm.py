@@ -24,7 +24,15 @@ def lstm_cell_step(wx, wh, b, x_t, h, c):
     return h.astype(x_t.dtype), c
 
 
-def lstm_layer(p, x, *, reverse: bool = False, kernel_impl: str = "jax"):
+def _kernel_knobs(cfg):
+    """(block_b, vmem_budget) for the Pallas LSTM kernels from cfg."""
+    block_b = getattr(cfg, "lstm_block_b", 0) or None
+    budget_mb = getattr(cfg, "lstm_vmem_budget_mb", 0)
+    return block_b, (budget_mb * 2 ** 20 if budget_mb else None)
+
+
+def lstm_layer(p, x, *, reverse: bool = False, kernel_impl: str = "jax",
+               block_b: int = None, vmem_budget: int = None):
     """x: (B,T,D_in) -> (B,T,H)."""
     B, T, _ = x.shape
     H = p["wh"].shape[0]
@@ -33,7 +41,8 @@ def lstm_layer(p, x, *, reverse: bool = False, kernel_impl: str = "jax"):
 
     if kernel_impl == "pallas":
         from repro.kernels.ops import lstm_sequence
-        return lstm_sequence(p["wx"], p["wh"], p["b"], x, reverse=reverse)
+        return lstm_sequence(p["wx"], p["wh"], p["b"], x, reverse=reverse,
+                             block_b=block_b, vmem_budget=vmem_budget)
 
     def step(carry, x_t):
         h, c = carry
@@ -83,10 +92,21 @@ def param_specs(cfg):
 
 
 def forward(cfg, params, features, *, kernel_impl: str = "jax"):
-    """features: (B, T, input_dim) -> logits (B, T, vocab)."""
+    """features: (B, T, input_dim) -> logits (B, T, vocab).
+
+    The pallas path runs each bi-LSTM layer as ONE fused kernel
+    invocation (both directions' weights resident in VMEM, x handed to
+    the kernel once) instead of two sequential direction passes."""
     x = features.astype(jnp.bfloat16)
+    block_b, vmem_budget = _kernel_knobs(cfg)
     for i in range(cfg.n_layers):
         p = params["layers"][f"layer_{i}"]
+        if kernel_impl == "pallas":
+            from repro.kernels.ops import blstm_sequence
+            x = blstm_sequence(p["fwd"]["wx"], p["fwd"]["wh"], p["fwd"]["b"],
+                               p["bwd"]["wx"], p["bwd"]["wh"], p["bwd"]["b"],
+                               x, block_b=block_b, vmem_budget=vmem_budget)
+            continue
         fwd = lstm_layer(p["fwd"], x, kernel_impl=kernel_impl)
         bwd = lstm_layer(p["bwd"], x, reverse=True, kernel_impl=kernel_impl)
         x = jnp.concatenate([fwd, bwd], axis=-1)

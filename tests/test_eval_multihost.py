@@ -2,6 +2,7 @@
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.eval import (edit_distance, frame_error_rate, greedy_ctc_decode,

@@ -67,6 +67,8 @@ def test_cost_analysis_undercounts_scan():
         lambda w, x: jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)[0],
         w, x)
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per computation
+        ca = ca[0] if ca else {}
     expect = 2.0 * L * n * d * d
     assert ca["flops"] < 0.5 * expect   # undercounted
     st = analyze_hlo(compiled.as_text())

@@ -2,6 +2,7 @@
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
@@ -111,8 +112,9 @@ def test_spec_always_valid(dims, axes):
 def test_spec_tree_to_sds_with_leading():
     from repro.sharding import spec_tree_to_sds
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import _make_mesh
+
+    mesh = _make_mesh((1, 1), ("data", "model"))
     r = MeshRules(mesh, default_rules())
     tree = {"w": ParamSpec((8, 4), "float32", ("embed", "mlp"))}
     sds = spec_tree_to_sds(tree, r, extra_leading=((2, "learner"),))
