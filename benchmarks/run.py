@@ -25,7 +25,51 @@ def all_benches():
         ("fig5_load_balance", T.bench_fig5_load_balance),
         ("compression", T.bench_compression),
         ("kernel_microbench", _kernel_microbench),
+        ("varlen_bucketing", _varlen_bucketing),
     ]
+
+
+def _varlen_bucketing():
+    """Fixed-pad vs length-bucketed batching at the synthetic SWB-like
+    length distribution (paper §IV-D loader; Zhang et al. 1907.05701):
+    padding efficiency (valid/padded frames) and valid-frames/s through
+    the jitted masked BLSTM loss on CPU.  Both modes see the SAME
+    utterance stream — only the padding waste differs."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.data import make_dataset
+    from repro.models import build_model
+    from repro.sharding import init_spec_tree
+
+    cfg = dataclasses.replace(get_arch("swb2000-blstm").reduced(),
+                              n_layers=1, lstm_hidden=32,
+                              lstm_bottleneck=16, input_dim=32, vocab=64)
+    model = build_model(cfg)
+    params = init_spec_tree(model.param_specs(), jax.random.PRNGKey(0))
+    loss = jax.jit(lambda p, b: model.loss_fn(p, b))
+
+    rows = []
+    for mode, bucket in (("fixed_pad", False), ("bucketed", True)):
+        ds = make_dataset(cfg, seq_len=64, batch=8, seed=0,
+                          var_len=True, bucket=bucket)
+        batches = [ds.batch_at(s) for s in range(16)]   # one shuffle window
+        valid = sum(int(b["lengths"].sum()) for b in batches)
+        padded = sum(b["features"].shape[0] * b["features"].shape[1]
+                     for b in batches)
+        for b in batches:                               # compile all shapes
+            jax.block_until_ready(loss(params, b))
+        t0 = time.perf_counter()
+        for b in batches:
+            jax.block_until_ready(loss(params, b))
+        dt = time.perf_counter() - t0
+        rows.append((f"varlen/{mode}_pad_efficiency", valid / padded,
+                     "valid/padded frames"))
+        rows.append((f"varlen/{mode}_kframes_per_s", valid / dt / 1e3,
+                     "valid kframes/s cpu jax"))
+    return rows
 
 
 def _kernel_microbench():

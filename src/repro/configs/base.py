@@ -94,6 +94,10 @@ class ArchConfig:
     # the (B//bB, T) grid; 0 -> auto-picked from the VMEM budget.
     lstm_block_b: int = 0
     lstm_vmem_budget_mb: int = 12
+    # training-forward residual stash precision ('float32' | 'bfloat16'):
+    # bf16 halves the ~55MB/direction gate/cell stash at ~1e-2 normalized
+    # gradient error (see kernels/lstm_cell.py 'Residual stashing').
+    lstm_stash_dtype: str = "float32"
 
     # distribution defaults (see repro/core/strategies.py and DESIGN.md)
     train_strategy: str = "sd_psgd"   # sc_psgd | sd_psgd | ad_psgd | bmuf | hring

@@ -67,8 +67,21 @@ def split_learner_batch(batch, n_learners: int):
     return jax.tree.map(one, batch)
 
 
+def _valid_frames(batch):
+    """Per-example valid-frame counts summed over the batch, or None for
+    rectangular batches (the ``lengths`` contract of repro.data.pipeline)."""
+    if isinstance(batch, dict) and "lengths" in batch:
+        return jnp.sum(batch["lengths"].astype(jnp.float32))
+    return None
+
+
 def _accumulated_grad(loss_fn, params, batch, n_micro: int):
-    """Gradient with optional microbatch accumulation (memory knob)."""
+    """Gradient with optional microbatch accumulation (memory knob).
+
+    When the batch carries ``lengths``, microbatches are combined with
+    frame weights (each microbatch's masked-mean loss/grad scaled by its
+    valid-frame count) so the result equals the masked mean over the
+    whole batch, not the mean-of-means."""
     if n_micro <= 1:
         loss, g = jax.value_and_grad(loss_fn)(params, batch)
         return loss, g
@@ -83,16 +96,19 @@ def _accumulated_grad(loss_fn, params, batch, n_micro: int):
         return jnp.moveaxis(x, 1, 0)
 
     mb = jax.tree.map(slice_micro, batch)
+    weighted = _valid_frames(batch) is not None
 
     def body(carry, mbatch):
-        acc, loss_acc = carry
+        acc, loss_acc, wsum = carry
         loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
-        acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
-        return (acc, loss_acc + loss), None
+        w = _valid_frames(mbatch) if weighted else jnp.float32(1.0)
+        acc = jax.tree.map(lambda a, b: a + w * b.astype(a.dtype), acc, g)
+        return (acc, loss_acc + w * loss, wsum + w), None
 
     g0 = jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
-    (g, loss), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), mb)
-    scale = 1.0 / n_micro
+    (g, loss, wsum), _ = jax.lax.scan(
+        body, (g0, jnp.float32(0.0), jnp.float32(0.0)), mb)
+    scale = 1.0 / jnp.maximum(wsum, 1e-6)
     return loss * scale, jax.tree.map(lambda x: x * scale, g)
 
 
@@ -183,6 +199,10 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
     """Build the jittable train step.
 
     loss_fn(params, batch) -> scalar, over UNstacked params/batch.
+    Batches carrying a ``lengths`` key (variable-length utterances; see
+    repro.data.pipeline) get frame-weighted aggregation: learner
+    gradients are scaled by their valid-frame share before mixing, and
+    the reported loss is the frame-weighted mean.
     For replicated strategies the step expects state['params'] stacked
     (L, ...) and the global batch either pre-split to (L, B/L, ...) with an
     explicit ('learner','batch',...) sharding (``pre_split=True`` — required
@@ -214,7 +234,23 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
         lbatch = batch if pre_split else split_learner_batch(batch, n_learners)
         grad_at = state["prev_params"] if strategy.stale else state["params"]
         loss_l, g_l = jax.vmap(grad_one)(grad_at, lbatch)
-        metrics["loss"] = jnp.mean(loss_l)
+        if isinstance(lbatch, dict) and "lengths" in lbatch:
+            # frame-weighted aggregation: each learner's masked-mean
+            # gradient is scaled by its valid-frame share, so the uniform
+            # 1/L combination (sc_psgd mixing) — and proportionally the
+            # sd/ad_psgd ring updates — equals the gradient of the GLOBAL
+            # masked loss:  sum_l f_l g_l / sum_l f_l.
+            frames = jnp.sum(lbatch["lengths"].astype(jnp.float32),
+                             axis=tuple(range(1, lbatch["lengths"].ndim)))
+            w = frames / jnp.maximum(jnp.mean(frames), 1e-6)
+            g_l = jax.tree.map(
+                lambda g: (g.astype(jnp.float32)
+                           * w.reshape((-1,) + (1,) * (g.ndim - 1))
+                           ).astype(g.dtype), g_l)
+            metrics["loss"] = (jnp.sum(loss_l * frames)
+                               / jnp.maximum(jnp.sum(frames), 1e-6))
+        else:
+            metrics["loss"] = jnp.mean(loss_l)
 
         if strategy.block_size:
             # BMUF: local SGD inside a block; blockwise model-update

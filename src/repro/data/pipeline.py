@@ -16,6 +16,32 @@ about optimizer dynamics, not acoustics):
 Batches are generated on the fly from the step index (infinite, resumable,
 no storage I/O); a host-side prefetch thread emulates the paper's
 overlapped data-loading workers (§IV-D).
+
+The ``lengths`` batch contract (variable-length utterances)
+-----------------------------------------------------------
+With ``var_len=True`` the ASR dataset emits *utterances* instead of
+rectangular frame blocks: per-sequence valid lengths are drawn from a
+clipped lognormal (SWB-like heavy spread), and every batch carries a
+``lengths`` key:
+
+* ``features``: (B, Tpad, D) f32 — zero beyond each row's length;
+* ``labels``:   (B, Tpad)   i32 — 0 beyond each row's length;
+* ``lengths``:  (B,)        i32 — valid frame count per row, >= 1.
+
+Downstream consumers (``models/lstm.py``, ``models/common.cross_entropy``,
+``core/strategies.py``) treat frames at t >= lengths[b] as padding: they
+are masked out of the loss, frozen out of the BLSTM recurrence, and
+excluded from gradient aggregation.  Fixed-length batches simply omit the
+key — the absence of ``lengths`` *is* the rectangular contract.
+
+Length-bucketed batch construction (``bucket=True``) mirrors the paper's
+loader (§IV-D) and Zhang et al. 1907.05701: utterances are generated in a
+shuffle window of ``bucket_window`` batches, sorted by length within the
+window, and carved into batches of near-equal length; each batch is padded
+only to its own max length rounded up to ``pad_multiple`` (bounding the
+number of distinct XLA compilations).  Utterance content is a pure
+function of (seed, window) regardless of bucketing, so fixed-pad and
+bucketed runs see the same workload — only the padding waste differs.
 """
 from __future__ import annotations
 
@@ -30,9 +56,20 @@ def _rng(seed, step):
     return np.random.default_rng(np.uint64(seed * 1_000_003 + step))
 
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
 @dataclass
 class SyntheticASRDataset:
-    """Frame-classification data for the paper's BLSTM acoustic model."""
+    """Frame-classification data for the paper's BLSTM acoustic model.
+
+    ``var_len=True`` switches to variable-length utterances carrying a
+    ``lengths`` key; ``bucket=True`` additionally sorts utterances by
+    length inside a ``bucket_window``-batch shuffle window so batches pad
+    to their own (rounded) max length instead of ``seq_len`` — see the
+    module docstring for the full batch contract.
+    """
 
     input_dim: int
     n_classes: int
@@ -40,6 +77,13 @@ class SyntheticASRDataset:
     batch: int
     seed: int = 0
     n_effective_classes: int = 64   # rank of the learnable structure
+    # --- variable-length utterances (module docstring: batch contract) ---
+    var_len: bool = False
+    min_len: int = 4
+    len_sigma: float = 0.6          # lognormal spread of utterance lengths
+    bucket: bool = False            # sort-within-shuffle-window batching
+    bucket_window: int = 16         # shuffle window, in batches
+    pad_multiple: int = 8           # bucketed Tpad rounds up to this
 
     def __post_init__(self):
         r = np.random.default_rng(self.seed)
@@ -49,14 +93,54 @@ class SyntheticASRDataset:
         pri = 1.0 / np.arange(1, k + 1)
         self.priors = pri / pri.sum()
         self.k = k
+        self._wcache = None          # (window_idx, lens, feats, cls)
+
+    def _window(self, w: int):
+        """All utterances of shuffle window ``w`` (vectorized, cached).
+
+        Utterance content is a pure function of (seed, w): fixed-pad and
+        bucketed batching carve the same utterance stream differently."""
+        if self._wcache is not None and self._wcache[0] == w:
+            return self._wcache[1:]
+        N = self.bucket_window * self.batch
+        r = np.random.default_rng((np.uint64(self.seed), np.uint64(w), 2))
+        med = max(self.min_len, int(0.6 * self.seq_len))
+        lens = np.clip(
+            np.rint(r.lognormal(np.log(med), self.len_sigma, size=N)),
+            self.min_len, self.seq_len).astype(np.int32)
+        cls = r.choice(self.k, size=(N, self.seq_len), p=self.priors)
+        feats = (self.centroids[cls]
+                 + 0.5 * r.normal(size=(N, self.seq_len,
+                                        self.input_dim))).astype(np.float32)
+        valid = np.arange(self.seq_len)[None, :] < lens[:, None]
+        feats *= valid[..., None]
+        cls = np.where(valid, cls, 0).astype(np.int32)
+        self._wcache = (w, lens, feats, cls)
+        return lens, feats, cls
 
     def batch_at(self, step: int):
-        r = _rng(self.seed, step)
-        cls = r.choice(self.k, size=(self.batch, self.seq_len), p=self.priors)
-        feats = (self.centroids[cls]
-                 + 0.5 * r.normal(size=(self.batch, self.seq_len,
-                                        self.input_dim))).astype(np.float32)
-        return {"features": feats, "labels": cls.astype(np.int32)}
+        if not self.var_len:
+            r = _rng(self.seed, step)
+            cls = r.choice(self.k, size=(self.batch, self.seq_len),
+                           p=self.priors)
+            feats = (self.centroids[cls]
+                     + 0.5 * r.normal(size=(self.batch, self.seq_len,
+                                            self.input_dim))
+                     ).astype(np.float32)
+            return {"features": feats, "labels": cls.astype(np.int32)}
+
+        w, j = divmod(step, self.bucket_window)
+        lens, feats, cls = self._window(w)
+        order = (np.argsort(lens, kind="stable") if self.bucket
+                 else np.arange(len(lens)))
+        rows = order[j * self.batch:(j + 1) * self.batch]
+        blens = lens[rows]
+        tpad = (min(self.seq_len,
+                    _round_up(int(blens.max()), self.pad_multiple))
+                if self.bucket else self.seq_len)
+        return {"features": feats[rows, :tpad],
+                "labels": cls[rows, :tpad],
+                "lengths": blens}
 
 
 @dataclass
@@ -148,12 +232,20 @@ class SyntheticVLMDataset:
         return out
 
 
-def make_dataset(cfg, *, seq_len: int, batch: int, seed: int = 0):
-    """Family-appropriate synthetic dataset for an ArchConfig."""
+def make_dataset(cfg, *, seq_len: int, batch: int, seed: int = 0,
+                 var_len: bool = False, bucket: bool = False):
+    """Family-appropriate synthetic dataset for an ArchConfig.
+
+    ``var_len``/``bucket`` select variable-length utterances with optional
+    length-bucketed batching (lstm family only; see module docstring)."""
     fam = cfg.family
+    if (var_len or bucket) and fam != "lstm":
+        raise ValueError(f"var_len/bucket batching is only defined for the "
+                         f"lstm (utterance) family, not {fam!r}")
     if fam == "lstm":
         return SyntheticASRDataset(cfg.input_dim, cfg.vocab, seq_len, batch,
-                                   seed=seed)
+                                   seed=seed, var_len=var_len or bucket,
+                                   bucket=bucket)
     if fam == "encdec":
         half = seq_len // 2
         return SyntheticSeq2SeqDataset(cfg.d_model, cfg.vocab, half, half,
@@ -168,13 +260,22 @@ def make_dataset(cfg, *, seq_len: int, batch: int, seed: int = 0):
 class Prefetcher:
     """Host-side prefetch thread: overlaps batch synthesis with the device
     step, the way the paper overlaps data loading with gradient compute
-    (§IV-D 'run data loaders in multiple processes')."""
+    (§IV-D 'run data loaders in multiple processes').
 
-    def __init__(self, dataset, start_step: int = 0, depth: int = 2):
+    Lifecycle: exceptions raised inside the worker are captured and
+    re-raised from :meth:`next` (after any already-synthesized batches
+    drain), so a consumer never blocks forever on a dead worker; and
+    :meth:`close` joins the worker thread (bounded by ``join_timeout``)
+    instead of abandoning it."""
+
+    def __init__(self, dataset, start_step: int = 0, depth: int = 2,
+                 join_timeout: float = 5.0):
         self.dataset = dataset
         self.q = queue.Queue(maxsize=depth)
         self.step = start_step
+        self.join_timeout = join_timeout
         self.stop = threading.Event()
+        self.error = None
         self.thread = threading.Thread(target=self._work, daemon=True)
         self.thread.start()
 
@@ -182,13 +283,29 @@ class Prefetcher:
         s = self.step
         while not self.stop.is_set():
             try:
-                self.q.put(self.dataset.batch_at(s), timeout=0.5)
-                s += 1
-            except queue.Full:
-                continue
+                batch = self.dataset.batch_at(s)
+            except BaseException as e:       # re-raised on the consumer side
+                self.error = e
+                return
+            while not self.stop.is_set():
+                try:
+                    self.q.put(batch, timeout=0.5)
+                    s += 1
+                    break
+                except queue.Full:
+                    continue
 
     def next(self):
-        return self.q.get()
+        while True:
+            try:
+                return self.q.get(timeout=0.5)
+            except queue.Empty:
+                if self.error is not None:
+                    raise RuntimeError(
+                        "prefetch worker failed") from self.error
+                if not self.thread.is_alive():
+                    raise RuntimeError("prefetch worker exited unexpectedly")
 
     def close(self):
         self.stop.set()
+        self.thread.join(timeout=self.join_timeout)

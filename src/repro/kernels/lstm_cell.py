@@ -23,6 +23,21 @@ pollute weight gradients because their output cotangents are zero.
 Gate layout (i|f|g|o) matches ``repro.models.lstm.lstm_cell_step``, which
 is the oracle via ``repro.kernels.ref.lstm_ref`` (forget-gate bias +1).
 
+Variable-length masking (``lengths``)
+-------------------------------------
+Passing a per-row ``lengths`` (B,) int32 vector (the batch contract of
+``repro.data.pipeline``) selects the masked kernels: a (bb,) lengths
+block rides along the batch grid axis, and on padded steps
+(time >= lengths[row]) the (h, c) VMEM carry is FROZEN and the emitted
+h_t is zero, so padded frames can never leak into weight gradients.  The
+reverse direction thereby reverses *within* each utterance's valid span:
+its leading invalid segment (right-padding) carries the zero initial
+state untouched until the last valid frame.  The backward kernel mirrors
+this — on invalid steps dgates are zeroed and the (dh, dc) carries pass
+through unchanged.  Rows added by batch-tile padding get length 0, which
+subsumes the zero-cotangent argument above.  Oracle:
+``repro.kernels.ref.lstm_ref(..., lengths=...)`` (masked scan).
+
 Three kernel variants share one body (``_make_fwd_kernel``):
 
 * inference forward (``stash=False``) — emits h_t only;
@@ -50,10 +65,14 @@ only tanh(c_t) is recomputed.
 
 Residual stashing vs recompute
 ------------------------------
-We stash post-activation gates + cell states in f32:
+We stash post-activation gates + cell states, by default in f32:
 4H + H = 5H floats per (row, step) — for the paper shape
 (B=256, T=21, H=512) that is 256*21*5*512*4B ≈ 55MB HBM per direction,
-written once in the forward and read once in the backward.  The
+written once in the forward and read once in the backward.
+``stash_dtype="bfloat16"`` halves that stash (gates are in [-1, 1] so
+bf16's 8 relative bits cost ~1e-2 normalized grad error — the relaxed
+tolerance of the parity test); the backward upcasts to f32 on read and
+its dW accumulators stay f32 either way.  The
 alternative — recomputing gates in the backward — saves that HBM
 traffic but re-runs both matmuls (2/3 of the step FLOPs) and still has
 to stash or recompute the cell-state sequence for df/dc; on TPU the
@@ -90,6 +109,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -107,11 +127,14 @@ def _round_up(n: int, m: int) -> int:
 
 
 def auto_block_b(B: int, D: int, H: int, itemsize: int, *, n_dir: int = 1,
-                 training: bool = False, vmem_budget: int = None) -> int:
+                 training: bool = False, vmem_budget: int = None,
+                 stash_itemsize: int = 4) -> int:
     """Largest power-of-two batch tile whose resident set fits the VMEM
     budget (see module docstring for the byte math).  Floors at 8 rows
     (the f32 sublane tile) even when the budget is overrun — at that
-    point the weights themselves are the problem, not the tile."""
+    point the weights themselves are the problem, not the tile.
+    ``stash_itemsize`` reflects the gate/cell residual stash dtype (2 for
+    the bf16 stash option)."""
     budget = vmem_budget or DEFAULT_VMEM_BUDGET
     wparams = D * 4 * H + H * 4 * H + 4 * H
 
@@ -122,14 +145,16 @@ def auto_block_b(B: int, D: int, H: int, itemsize: int, *, n_dir: int = 1,
         if not training:
             return weights + streamed + carries
         # worst single-kernel resident set of the training pair:
-        # (a) stashing forward — all directions' weights + f32 gate/cell
+        # (a) stashing forward — all directions' weights + gate/cell
         #     stash blocks;  (b) backward — runs ONE direction at a time:
         #     that direction's weights + its f32 dWx/dWh/db accumulators
         #     + the streamed dy/stash/x/dx blocks + (dh, dc) carries.
-        fwd = weights + streamed + carries + 2 * n_dir * bb * 5 * H * 4
+        fwd = (weights + streamed + carries
+               + 2 * n_dir * bb * 5 * H * stash_itemsize)
         bwd = (wparams * (itemsize + 4)
                + 2 * bb * (D + H) * itemsize
-               + 2 * bb * (5 * H + H) * 4
+               + 2 * bb * 5 * H * stash_itemsize
+               + 2 * bb * H * 4
                + 2 * bb * H * 4)
         return max(fwd, bwd)
 
@@ -150,7 +175,12 @@ def _pad_rows(a, Bp):
     return jnp.pad(a, ((0, Bp - B),) + ((0, 0),) * (a.ndim - 1))
 
 
-def _tile(x, n_dir: int, H: int, block_b, vmem_budget, *, training: bool):
+def _stash_dtype(stash_dtype):
+    return jnp.dtype(stash_dtype or "float32")
+
+
+def _tile(x, n_dir: int, H: int, block_b, vmem_budget, *, training: bool,
+          stash_itemsize: int = 4):
     """The single source of the (block_b, padded_B) pair.  The stashing
     forward and the backward wrapper both derive the tile through here
     with ``training=True`` and identical arguments, so the backward's
@@ -162,7 +192,8 @@ def _tile(x, n_dir: int, H: int, block_b, vmem_budget, *, training: bool):
     B, _, D = x.shape
     bb = block_b or auto_block_b(B, D, H, jnp.dtype(x.dtype).itemsize,
                                  n_dir=n_dir, training=training,
-                                 vmem_budget=vmem_budget)
+                                 vmem_budget=vmem_budget,
+                                 stash_itemsize=stash_itemsize)
     return bb, _round_up(B, bb)
 
 
@@ -170,21 +201,30 @@ def _tile(x, n_dir: int, H: int, block_b, vmem_budget, *, training: bool):
 # forward kernels (inference / training-with-stash, uni- or bidirectional)
 # ---------------------------------------------------------------------------
 
-def _make_fwd_kernel(n_dir: int, stash: bool):
+def _make_fwd_kernel(n_dir: int, stash: bool, revs=None):
     """Kernel body over refs laid out as:
 
-    inputs:  x * n_dir, then (wx, wh, b) * n_dir
+    inputs:  x * n_dir, then (wx, wh, b) * n_dir, then lengths if masked
     outputs: y * n_dir, then (acts, cseq) * n_dir if ``stash``
     scratch: (h, c) * n_dir
+
+    ``revs`` enables masking: it carries each direction's reverse flag so
+    the body can recover the real time index of grid step t and freeze
+    the (h, c) carry / zero the output on padded steps.
     """
+    masked = revs is not None
+    n_in = 4 * n_dir + (1 if masked else 0)
     n_out = n_dir * (3 if stash else 1)
 
     def kernel(*refs):
         x_refs = refs[:n_dir]
         w_refs = refs[n_dir:4 * n_dir]
-        out_refs = refs[4 * n_dir:4 * n_dir + n_out]
-        scr_refs = refs[4 * n_dir + n_out:]
+        out_refs = refs[n_in:n_in + n_out]
+        scr_refs = refs[n_in + n_out:]
         t = pl.program_id(1)
+        if masked:
+            lens = refs[4 * n_dir][...]                     # (bb,) int32
+            T = pl.num_programs(1)
 
         for d in range(n_dir):
             wx_ref, wh_ref, b_ref = w_refs[3 * d:3 * d + 3]
@@ -197,6 +237,7 @@ def _make_fwd_kernel(n_dir: int, stash: bool):
 
             x = x_refs[d][...]
             h = h_ref[...]
+            c_prev = c_ref[...]
             gates = (
                 jax.lax.dot_general(x, wx_ref[...], (((1,), (0,)), ((), ())),
                                     preferred_element_type=jnp.float32)
@@ -210,16 +251,25 @@ def _make_fwd_kernel(n_dir: int, stash: bool):
             f = jax.nn.sigmoid(gates[:, 1 * H:2 * H] + 1.0)
             g = jnp.tanh(gates[:, 2 * H:3 * H])
             o = jax.nn.sigmoid(gates[:, 3 * H:4 * H])
-            c = f * c_ref[...] + i * g
+            c = f * c_prev + i * g
             h_new = o * jnp.tanh(c)
+            if masked:
+                time_idx = (T - 1 - t) if revs[d] else t
+                vm = (time_idx < lens)[:, None]
+                c = jnp.where(vm, c, c_prev)                # freeze carry
+                y = jnp.where(vm, h_new, jnp.zeros_like(h_new))
+                h_new = jnp.where(vm, h_new, h)
+            else:
+                y = h_new
             c_ref[...] = c
             h_ref[...] = h_new
-            out_refs[d][...] = h_new.astype(out_refs[d].dtype)
+            out_refs[d][...] = y.astype(out_refs[d].dtype)
             if stash:
                 acts_ref = out_refs[n_dir + 2 * d]
                 cseq_ref = out_refs[n_dir + 2 * d + 1]
-                acts_ref[...] = jnp.concatenate([i, f, g, o], axis=-1)
-                cseq_ref[...] = c
+                acts_ref[...] = jnp.concatenate(
+                    [i, f, g, o], axis=-1).astype(acts_ref.dtype)
+                cseq_ref[...] = c.astype(cseq_ref.dtype)
 
     return kernel
 
@@ -230,17 +280,22 @@ def _xmap(T: int, reverse: bool):
     return lambda ib, t: (ib, t, 0)
 
 
-def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret):
+def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret,
+             lengths=None, stash_dtype=None):
     """Run the forward kernel for one or two directions in one grid pass.
 
     ws: ((wx, wh, b), ...) per direction; revs: matching reverse flags.
-    Returns (outs, bb): outs is the flat pallas output list over the
-    *padded* batch (y per direction, then (acts, cseq) pairs if stash).
+    ``lengths`` (B,) int32 selects the masked kernel (padded rows of the
+    batch tile get length 0).  Returns (outs, bb): outs is the flat
+    pallas output list over the *padded* batch (y per direction, then
+    (acts, cseq) pairs if stash, in ``stash_dtype``).
     """
     B, T, D = x.shape
     H = ws[0][1].shape[0]
     n_dir = len(ws)
-    bb, Bp = _tile(x, n_dir, H, block_b, vmem_budget, training=stash)
+    sdt = _stash_dtype(stash_dtype)
+    bb, Bp = _tile(x, n_dir, H, block_b, vmem_budget, training=stash,
+                   stash_itemsize=sdt.itemsize)
     xp = _pad_rows(x, Bp)
     grid = (Bp // bb, T)
 
@@ -255,6 +310,9 @@ def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret):
             pl.BlockSpec((H, 4 * H), lambda ib, t: (0, 0)),
             pl.BlockSpec((4 * H,), lambda ib, t: (0,)),
         ]
+    if lengths is not None:
+        operands.append(_pad_rows(lengths.astype(jnp.int32), Bp))
+        in_specs.append(pl.BlockSpec((bb,), lambda ib, t: (ib,)))
 
     out_specs = [pl.BlockSpec((bb, None, H), _xmap(T, rev)) for rev in revs]
     out_shape = [jax.ShapeDtypeStruct((Bp, T, H), x.dtype) for _ in revs]
@@ -262,8 +320,8 @@ def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret):
         for rev in revs:
             out_specs += [pl.BlockSpec((bb, None, 4 * H), _xmap(T, rev)),
                           pl.BlockSpec((bb, None, H), _xmap(T, rev))]
-            out_shape += [jax.ShapeDtypeStruct((Bp, T, 4 * H), jnp.float32),
-                          jax.ShapeDtypeStruct((Bp, T, H), jnp.float32)]
+            out_shape += [jax.ShapeDtypeStruct((Bp, T, 4 * H), sdt),
+                          jax.ShapeDtypeStruct((Bp, T, H), sdt)]
 
     scratch = []
     for _ in revs:
@@ -271,7 +329,8 @@ def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret):
                     pltpu.VMEM((bb, H), jnp.float32)]
 
     outs = pl.pallas_call(
-        _make_fwd_kernel(n_dir, stash),
+        _make_fwd_kernel(n_dir, stash,
+                         revs if lengths is not None else None),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -286,69 +345,100 @@ def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret):
 # backward kernel (one direction; the BLSTM VJP runs it once per direction)
 # ---------------------------------------------------------------------------
 
-def _bwd_kernel(dy_ref, acts_ref, c_ref, cprev_ref, hprev_ref, x_ref,
-                wx_ref, wh_ref, dx_ref, dwx_ref, dwh_ref, db_ref,
-                dh_ref, dc_ref):
+def _make_bwd_kernel(reverse: bool, masked: bool):
     """One reverse-recurrence step.  Grid (B//bB, T); grid axis 1 walks
     the recurrence backwards (index maps reverse time), carrying (dh, dc)
     in scratch and accumulating dWx/dWh/db into constant-mapped f32
-    output blocks that stay VMEM-resident for the whole grid."""
-    ib = pl.program_id(0)
-    r = pl.program_id(1)
+    output blocks that stay VMEM-resident for the whole grid.
 
-    @pl.when(r == 0)
-    def _init_carry():
-        dh_ref[...] = jnp.zeros_like(dh_ref)
-        dc_ref[...] = jnp.zeros_like(dc_ref)
+    ``masked`` adds a trailing lengths input: on padded steps dgates are
+    zeroed (so dx and the dW accumulators see nothing) and the (dh, dc)
+    carries pass through unchanged — the exact VJP of the frozen-carry
+    forward.  ``reverse`` is only consulted when masked (to recover the
+    real time index of grid step r)."""
 
-    @pl.when((r == 0) & (ib == 0))
-    def _init_accum():
-        dwx_ref[...] = jnp.zeros_like(dwx_ref)
-        dwh_ref[...] = jnp.zeros_like(dwh_ref)
-        db_ref[...] = jnp.zeros_like(db_ref)
+    def kernel(*refs):
+        (dy_ref, acts_ref, c_ref, cprev_ref, hprev_ref, x_ref,
+         wx_ref, wh_ref) = refs[:8]
+        len_ref = refs[8] if masked else None
+        (dx_ref, dwx_ref, dwh_ref, db_ref,
+         dh_ref, dc_ref) = refs[8 + (1 if masked else 0):]
+        ib = pl.program_id(0)
+        r = pl.program_id(1)
 
-    # the last grid step is the *first* step of the original recurrence:
-    # its h_{t-1}/c_{t-1} are the zero initial state, not array values
-    boundary = r == pl.num_programs(1) - 1
-    H = dh_ref.shape[-1]
-    acts = acts_ref[...]
-    i = acts[:, 0 * H:1 * H]
-    f = acts[:, 1 * H:2 * H]
-    g = acts[:, 2 * H:3 * H]
-    o = acts[:, 3 * H:4 * H]
-    c = c_ref[...]
-    zero = jnp.zeros_like(c)
-    c_prev = jnp.where(boundary, zero, cprev_ref[...])
-    h_prev = jnp.where(boundary, zero, hprev_ref[...].astype(jnp.float32))
+        @pl.when(r == 0)
+        def _init_carry():
+            dh_ref[...] = jnp.zeros_like(dh_ref)
+            dc_ref[...] = jnp.zeros_like(dc_ref)
 
-    dh = dy_ref[...].astype(jnp.float32) + dh_ref[...]
-    tc = jnp.tanh(c)
-    dc = dh * o * (1.0 - tc * tc) + dc_ref[...]
-    dgates = jnp.concatenate([
-        dc * g * i * (1.0 - i),          # d pre-act input gate
-        dc * c_prev * f * (1.0 - f),     # d pre-act forget gate
-        dc * i * (1.0 - g * g),          # d pre-act cell candidate
-        dh * tc * o * (1.0 - o),         # d pre-act output gate
-    ], axis=-1)
+        @pl.when((r == 0) & (ib == 0))
+        def _init_accum():
+            dwx_ref[...] = jnp.zeros_like(dwx_ref)
+            dwh_ref[...] = jnp.zeros_like(dwh_ref)
+            db_ref[...] = jnp.zeros_like(db_ref)
 
-    wx = wx_ref[...].astype(jnp.float32)
-    wh = wh_ref[...].astype(jnp.float32)
-    dx_ref[...] = jax.lax.dot_general(
-        dgates, wx, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(dx_ref.dtype)
-    dh_ref[...] = jax.lax.dot_general(
-        dgates, wh, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    dc_ref[...] = dc * f
+        # the last grid step is the *first* step of the original
+        # recurrence: its h_{t-1}/c_{t-1} are the zero initial state,
+        # not array values
+        boundary = r == pl.num_programs(1) - 1
+        H = dh_ref.shape[-1]
+        acts = acts_ref[...].astype(jnp.float32)
+        i = acts[:, 0 * H:1 * H]
+        f = acts[:, 1 * H:2 * H]
+        g = acts[:, 2 * H:3 * H]
+        o = acts[:, 3 * H:4 * H]
+        c = c_ref[...].astype(jnp.float32)
+        zero = jnp.zeros_like(c)
+        c_prev = jnp.where(boundary, zero,
+                           cprev_ref[...].astype(jnp.float32))
+        h_prev = jnp.where(boundary, zero,
+                           hprev_ref[...].astype(jnp.float32))
 
-    x = x_ref[...].astype(jnp.float32)
-    dwx_ref[...] += jax.lax.dot_general(
-        x, dgates, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    dwh_ref[...] += jax.lax.dot_general(
-        h_prev, dgates, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    db_ref[...] += jnp.sum(dgates, axis=0)
+        dh_carry = dh_ref[...]
+        dc_carry = dc_ref[...]
+        dh = dy_ref[...].astype(jnp.float32) + dh_carry
+        tc = jnp.tanh(c)
+        dc = dh * o * (1.0 - tc * tc) + dc_carry
+        if masked:
+            T = pl.num_programs(1)
+            time_idx = r if reverse else T - 1 - r
+            vm = (time_idx < len_ref[...])[:, None]
+            dh = jnp.where(vm, dh, zero)
+            dc = jnp.where(vm, dc, zero)
+        dgates = jnp.concatenate([
+            dc * g * i * (1.0 - i),          # d pre-act input gate
+            dc * c_prev * f * (1.0 - f),     # d pre-act forget gate
+            dc * i * (1.0 - g * g),          # d pre-act cell candidate
+            dh * tc * o * (1.0 - o),         # d pre-act output gate
+        ], axis=-1)
+
+        wx = wx_ref[...].astype(jnp.float32)
+        wh = wh_ref[...].astype(jnp.float32)
+        dx_ref[...] = jax.lax.dot_general(
+            dgates, wx, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dx_ref.dtype)
+        dh_new = jax.lax.dot_general(
+            dgates, wh, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dc_new = dc * f
+        if masked:
+            # padded step: h_t = h_{t-1}, c_t = c_{t-1} — the carries
+            # pass straight through
+            dh_new = jnp.where(vm, dh_new, dh_carry)
+            dc_new = jnp.where(vm, dc_new, dc_carry)
+        dh_ref[...] = dh_new
+        dc_ref[...] = dc_new
+
+        x = x_ref[...].astype(jnp.float32)
+        dwx_ref[...] += jax.lax.dot_general(
+            x, dgates, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dwh_ref[...] += jax.lax.dot_general(
+            h_prev, dgates, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        db_ref[...] += jnp.sum(dgates, axis=0)
+
+    return kernel
 
 
 def _bwd_tmap(T: int, reverse: bool):
@@ -368,29 +458,37 @@ def _bwd_pmap(T: int, reverse: bool):
 
 
 def _run_bwd(wx, wh, xp, yp, acts, cseq, dyp, *, reverse: bool, bb: int,
-             interpret):
+             interpret, lengths_p=None):
     """Backward kernel over padded arrays -> (dxp, dwx, dwh, db), f32
-    weight grads (caller casts to param dtypes)."""
+    weight grads (caller casts to param dtypes).  ``lengths_p`` is the
+    row-padded (Bp,) lengths vector for the masked VJP (None = dense)."""
     Bp, T, D = xp.shape
     H = wh.shape[0]
     assert Bp % bb == 0, (Bp, bb)   # forward/backward tile lockstep
     grid = (Bp // bb, T)
     tmap = _bwd_tmap(T, reverse)
     pmap = _bwd_pmap(T, reverse)
+    masked = lengths_p is not None
+
+    in_specs = [
+        pl.BlockSpec((bb, None, H), tmap),          # dy_t
+        pl.BlockSpec((bb, None, 4 * H), tmap),      # stashed gates_t
+        pl.BlockSpec((bb, None, H), tmap),          # c_t
+        pl.BlockSpec((bb, None, H), pmap),          # c_{t-1}
+        pl.BlockSpec((bb, None, H), pmap),          # h_{t-1} (= y)
+        pl.BlockSpec((bb, None, D), tmap),          # x_t
+        pl.BlockSpec((D, 4 * H), lambda ib, r: (0, 0)),
+        pl.BlockSpec((H, 4 * H), lambda ib, r: (0, 0)),
+    ]
+    operands = [dyp, acts, cseq, cseq, yp, xp, wx, wh]
+    if masked:
+        in_specs.append(pl.BlockSpec((bb,), lambda ib, r: (ib,)))
+        operands.append(lengths_p)
 
     return pl.pallas_call(
-        _bwd_kernel,
+        _make_bwd_kernel(reverse, masked),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, None, H), tmap),          # dy_t
-            pl.BlockSpec((bb, None, 4 * H), tmap),      # stashed gates_t
-            pl.BlockSpec((bb, None, H), tmap),          # c_t
-            pl.BlockSpec((bb, None, H), pmap),          # c_{t-1}
-            pl.BlockSpec((bb, None, H), pmap),          # h_{t-1} (= y)
-            pl.BlockSpec((bb, None, D), tmap),          # x_t
-            pl.BlockSpec((D, 4 * H), lambda ib, r: (0, 0)),
-            pl.BlockSpec((H, 4 * H), lambda ib, r: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bb, None, D), tmap),
             pl.BlockSpec((D, 4 * H), lambda ib, r: (0, 0)),
@@ -408,56 +506,72 @@ def _run_bwd(wx, wh, xp, yp, acts, cseq, dyp, *, reverse: bool, bb: int,
             pltpu.VMEM((bb, H), jnp.float32),
         ],
         interpret=_resolve_interpret(interpret),
-    )(dyp, acts, cseq, cseq, yp, xp, wx, wh)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
 # custom-VJP wiring: unidirectional
 # ---------------------------------------------------------------------------
 
+def _len_cotangent(lengths):
+    """Cotangent for the integer lengths input (float0 per JAX's rule for
+    non-differentiable primal dtypes; None when lengths wasn't passed)."""
+    if lengths is None:
+        return None
+    return np.zeros(lengths.shape, jax.dtypes.float0)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _lstm_vjp(static, wx, wh, b, x):
-    reverse, interpret, block_b, vmem_budget = static
+def _lstm_vjp(static, wx, wh, b, x, lengths):
+    reverse, interpret, block_b, vmem_budget, stash_dtype = static
     outs, _ = _run_fwd(((wx, wh, b),), x, (reverse,), stash=False,
                        block_b=block_b, vmem_budget=vmem_budget,
-                       interpret=interpret)
+                       interpret=interpret, lengths=lengths)
     return outs[0][:x.shape[0]]
 
 
-def _lstm_vjp_fwd(static, wx, wh, b, x):
-    reverse, interpret, block_b, vmem_budget = static
+def _lstm_vjp_fwd(static, wx, wh, b, x, lengths):
+    reverse, interpret, block_b, vmem_budget, stash_dtype = static
     outs, _ = _run_fwd(((wx, wh, b),), x, (reverse,), stash=True,
                        block_b=block_b, vmem_budget=vmem_budget,
-                       interpret=interpret)
+                       interpret=interpret, lengths=lengths,
+                       stash_dtype=stash_dtype)
     yp, acts, cseq = outs
-    return yp[:x.shape[0]], (wx, wh, b, x, yp, acts, cseq)
+    return yp[:x.shape[0]], (wx, wh, b, x, lengths, yp, acts, cseq)
 
 
 def _lstm_vjp_bwd(static, res, dy):
-    reverse, interpret, block_b, vmem_budget = static
-    wx, wh, b, x, yp, acts, cseq = res
+    reverse, interpret, block_b, vmem_budget, stash_dtype = static
+    wx, wh, b, x, lengths, yp, acts, cseq = res
     B = x.shape[0]
-    bb, Bp = _tile(x, 1, wh.shape[0], block_b, vmem_budget, training=True)
+    bb, Bp = _tile(x, 1, wh.shape[0], block_b, vmem_budget, training=True,
+                   stash_itemsize=_stash_dtype(stash_dtype).itemsize)
     assert Bp == yp.shape[0], (Bp, yp.shape)
+    lp = (None if lengths is None
+          else _pad_rows(lengths.astype(jnp.int32), Bp))
     dxp, dwx, dwh, db = _run_bwd(
         wx, wh, _pad_rows(x, Bp), yp, acts, cseq, _pad_rows(dy, Bp),
-        reverse=reverse, bb=bb, interpret=interpret)
+        reverse=reverse, bb=bb, interpret=interpret, lengths_p=lp)
     return (dwx.astype(wx.dtype), dwh.astype(wh.dtype),
-            db.astype(b.dtype), dxp[:B].astype(x.dtype))
+            db.astype(b.dtype), dxp[:B].astype(x.dtype),
+            _len_cotangent(lengths))
 
 
 _lstm_vjp.defvjp(_lstm_vjp_fwd, _lstm_vjp_bwd)
 
 
-def lstm_sequence(wx, wh, b, x, *, reverse: bool = False,
+def lstm_sequence(wx, wh, b, x, lengths=None, *, reverse: bool = False,
                   interpret: bool = None, block_b: int = None,
-                  vmem_budget: int = None):
+                  vmem_budget: int = None, stash_dtype: str = None):
     """x: (B, T, D) -> (B, T, H); weights wx (D,4H), wh (H,4H), b (4H,).
 
     Differentiable (custom VJP; see module docstring).  ``block_b``
-    tiles the batch (None -> :func:`auto_block_b`)."""
-    return _lstm_vjp((bool(reverse), interpret, block_b, vmem_budget),
-                     wx, wh, b, x)
+    tiles the batch (None -> :func:`auto_block_b`).  ``lengths`` (B,)
+    int selects the masked recurrence (frozen carry + zeroed output on
+    padded steps); ``stash_dtype`` ('float32' | 'bfloat16') sets the
+    training-forward residual stash precision."""
+    return _lstm_vjp((bool(reverse), interpret, block_b, vmem_budget,
+                      stash_dtype), wx, wh, b, x, lengths)
 
 
 # ---------------------------------------------------------------------------
@@ -468,60 +582,71 @@ _BLSTM_REVS = (False, True)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _blstm_vjp(static, wxf, whf, bf, wxb, whb, bb_, x):
-    interpret, block_b, vmem_budget = static
+def _blstm_vjp(static, wxf, whf, bf, wxb, whb, bb_, x, lengths):
+    interpret, block_b, vmem_budget, stash_dtype = static
     outs, _ = _run_fwd(((wxf, whf, bf), (wxb, whb, bb_)), x, _BLSTM_REVS,
                        stash=False, block_b=block_b,
-                       vmem_budget=vmem_budget, interpret=interpret)
+                       vmem_budget=vmem_budget, interpret=interpret,
+                       lengths=lengths)
     B = x.shape[0]
     return jnp.concatenate([outs[0][:B], outs[1][:B]], axis=-1)
 
 
-def _blstm_vjp_fwd(static, wxf, whf, bf, wxb, whb, bb_, x):
-    interpret, block_b, vmem_budget = static
+def _blstm_vjp_fwd(static, wxf, whf, bf, wxb, whb, bb_, x, lengths):
+    interpret, block_b, vmem_budget, stash_dtype = static
     outs, _ = _run_fwd(((wxf, whf, bf), (wxb, whb, bb_)), x, _BLSTM_REVS,
                        stash=True, block_b=block_b,
-                       vmem_budget=vmem_budget, interpret=interpret)
+                       vmem_budget=vmem_budget, interpret=interpret,
+                       lengths=lengths, stash_dtype=stash_dtype)
     yf, yb, acts_f, cseq_f, acts_b, cseq_b = outs
     B = x.shape[0]
     y = jnp.concatenate([yf[:B], yb[:B]], axis=-1)
-    return y, (wxf, whf, bf, wxb, whb, bb_, x,
+    return y, (wxf, whf, bf, wxb, whb, bb_, x, lengths,
                yf, acts_f, cseq_f, yb, acts_b, cseq_b)
 
 
 def _blstm_vjp_bwd(static, res, dy):
-    interpret, block_b, vmem_budget = static
-    (wxf, whf, bf, wxb, whb, bb_, x,
+    interpret, block_b, vmem_budget, stash_dtype = static
+    (wxf, whf, bf, wxb, whb, bb_, x, lengths,
      yf, acts_f, cseq_f, yb, acts_b, cseq_b) = res
     B = x.shape[0]
     H = whf.shape[0]
-    bb, Bp = _tile(x, 2, H, block_b, vmem_budget, training=True)
+    bb, Bp = _tile(x, 2, H, block_b, vmem_budget, training=True,
+                   stash_itemsize=_stash_dtype(stash_dtype).itemsize)
     assert Bp == yf.shape[0], (Bp, yf.shape)
     xp = _pad_rows(x, Bp)
+    lp = (None if lengths is None
+          else _pad_rows(lengths.astype(jnp.int32), Bp))
     dyf = _pad_rows(dy[..., :H], Bp)
     dyb = _pad_rows(dy[..., H:], Bp)
     dxf, dwxf, dwhf, dbf = _run_bwd(wxf, whf, xp, yf, acts_f, cseq_f, dyf,
                                     reverse=False, bb=bb,
-                                    interpret=interpret)
+                                    interpret=interpret, lengths_p=lp)
     dxb, dwxb, dwhb, dbb = _run_bwd(wxb, whb, xp, yb, acts_b, cseq_b, dyb,
                                     reverse=True, bb=bb,
-                                    interpret=interpret)
+                                    interpret=interpret, lengths_p=lp)
     dx = (dxf.astype(jnp.float32) + dxb.astype(jnp.float32))[:B]
     return (dwxf.astype(wxf.dtype), dwhf.astype(whf.dtype),
             dbf.astype(bf.dtype), dwxb.astype(wxb.dtype),
             dwhb.astype(whb.dtype), dbb.astype(bb_.dtype),
-            dx.astype(x.dtype))
+            dx.astype(x.dtype), _len_cotangent(lengths))
 
 
 _blstm_vjp.defvjp(_blstm_vjp_fwd, _blstm_vjp_bwd)
 
 
-def blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x, *,
-                   interpret: bool = None, block_b: int = None,
-                   vmem_budget: int = None):
+def blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
+                   lengths=None, *, interpret: bool = None,
+                   block_b: int = None, vmem_budget: int = None,
+                   stash_dtype: str = None):
     """Fused bidirectional layer: x (B, T, D) -> (B, T, 2H) with the
     forward-direction output in [..., :H] and the time-reversed
     direction in [..., H:] — one kernel invocation, both weight sets
-    resident, bit-identical to two :func:`lstm_sequence` calls."""
-    return _blstm_vjp((interpret, block_b, vmem_budget),
-                      wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x)
+    resident, bit-identical to two :func:`lstm_sequence` calls.
+
+    ``lengths`` (B,) int masks padded steps (the reverse direction then
+    reverses within each row's valid span); ``stash_dtype`` sets the
+    training-forward residual stash precision."""
+    return _blstm_vjp((interpret, block_b, vmem_budget, stash_dtype),
+                      wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
+                      lengths)

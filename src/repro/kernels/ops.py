@@ -28,18 +28,24 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 @functools.partial(jax.jit, static_argnames=("reverse", "block_b",
-                                             "vmem_budget"))
-def lstm_sequence(wx, wh, b, x, *, reverse: bool = False,
-                  block_b: int = None, vmem_budget: int = None):
-    return _lstm_sequence(wx, wh, b, x, reverse=reverse, block_b=block_b,
-                          vmem_budget=vmem_budget)
+                                             "vmem_budget", "stash_dtype"))
+def lstm_sequence(wx, wh, b, x, lengths=None, *, reverse: bool = False,
+                  block_b: int = None, vmem_budget: int = None,
+                  stash_dtype: str = None):
+    return _lstm_sequence(wx, wh, b, x, lengths, reverse=reverse,
+                          block_b=block_b, vmem_budget=vmem_budget,
+                          stash_dtype=stash_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "vmem_budget"))
-def blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x, *,
-                   block_b: int = None, vmem_budget: int = None):
+@functools.partial(jax.jit, static_argnames=("block_b", "vmem_budget",
+                                             "stash_dtype"))
+def blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
+                   lengths=None, *, block_b: int = None,
+                   vmem_budget: int = None, stash_dtype: str = None):
     return _blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
-                           block_b=block_b, vmem_budget=vmem_budget)
+                           lengths, block_b=block_b,
+                           vmem_budget=vmem_budget,
+                           stash_dtype=stash_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -36,9 +36,12 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
     return o.reshape(B, Sq, H, E).astype(q.dtype)
 
 
-def lstm_ref(wx, wh, b, x, *, reverse: bool = False):
+def lstm_ref(wx, wh, b, x, *, reverse: bool = False, lengths=None):
     """Matches kernels.lstm_cell.lstm_sequence; gate order i|f|g|o,
-    forget bias +1."""
+    forget bias +1.  With ``lengths`` (B,) this is the masked scan
+    oracle: the (h, c) carry is frozen and the output zeroed on padded
+    steps (t >= lengths[b]), so the reverse direction reverses within
+    each row's valid span."""
     from repro.models.lstm import lstm_cell_step
 
     B, T, D = x.shape
@@ -46,22 +49,38 @@ def lstm_ref(wx, wh, b, x, *, reverse: bool = False):
     h = jnp.zeros((B, H), x.dtype)
     c = jnp.zeros((B, H), jnp.float32)
 
-    def step(carry, x_t):
+    if lengths is None:
+        def step(carry, x_t):
+            h, c = carry
+            h, c = lstm_cell_step(wx, wh, b, x_t, h, c)
+            return (h, c), h
+
+        xs = jnp.moveaxis(x, 1, 0)
+        _, hs = jax.lax.scan(step, (h, c), xs, reverse=reverse)
+        return jnp.moveaxis(hs, 0, 1)
+
+    def step(carry, inp):
+        x_t, t = inp
         h, c = carry
-        h, c = lstm_cell_step(wx, wh, b, x_t, h, c)
-        return (h, c), h
+        h2, c2 = lstm_cell_step(wx, wh, b, x_t, h, c)
+        v = (t < lengths)[:, None]
+        h = jnp.where(v, h2, h)
+        c = jnp.where(v, c2, c)
+        return (h, c), jnp.where(v, h2, jnp.zeros_like(h2))
 
     xs = jnp.moveaxis(x, 1, 0)
-    _, hs = jax.lax.scan(step, (h, c), xs, reverse=reverse)
+    _, hs = jax.lax.scan(step, (h, c), (xs, jnp.arange(T)), reverse=reverse)
     return jnp.moveaxis(hs, 0, 1)
 
 
-def blstm_ref(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x):
+def blstm_ref(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
+              lengths=None):
     """Oracle for kernels.lstm_cell.blstm_sequence: the two directions run
     separately and concatenate on the feature axis."""
     return jnp.concatenate(
-        [lstm_ref(wx_fwd, wh_fwd, b_fwd, x),
-         lstm_ref(wx_bwd, wh_bwd, b_bwd, x, reverse=True)], axis=-1)
+        [lstm_ref(wx_fwd, wh_fwd, b_fwd, x, lengths=lengths),
+         lstm_ref(wx_bwd, wh_bwd, b_bwd, x, reverse=True,
+                  lengths=lengths)], axis=-1)
 
 
 def ssd_ref(x, dt, A, Bm, Cm):

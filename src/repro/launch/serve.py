@@ -62,12 +62,6 @@ class Server:
         self.outputs = [[] for _ in range(slots)]
         self.req_ids = [-1] * slots
 
-        def decode(params, cache, tokens, pos_vec):
-            # per-slot positions: run the shared step at the max position and
-            # rely on per-slot masks?  Simplest correct form: vmap the
-            # single-slot decode over slots with its own pos.
-            raise NotImplementedError
-
         self._jit_prefill = jax.jit(
             lambda params, batch: self.model.prefill_fn(
                 params, batch, cache_len=max_len,
@@ -82,6 +76,14 @@ class Server:
         if len(free) == 0:
             return False
         slot = int(free[0])
+        prompt = np.asarray(prompt)
+        # clamp to the most recent max_len-1 tokens: the cache write
+        # position must stay inside the slot's max_len cache row, and one
+        # position is reserved for the first generated token (floor of 1
+        # token — a -0 slice would keep the whole prompt)
+        keep = max(self.max_len - 1, 1)
+        if len(prompt) > keep:
+            prompt = prompt[-keep:]
         logits, row_cache = self._jit_prefill(
             self.params, {"tokens": jnp.asarray(prompt[None, :])})
         self.cache = scatter_slot(self.cache, row_cache, slot)

@@ -103,19 +103,34 @@ def main(argv=None):
                     help="Pallas LSTM batch tile (0 = auto from VMEM)")
     ap.add_argument("--vmem-budget-mb", type=int, default=0,
                     help="VMEM budget for kernel auto-tiling (0 = cfg)")
+    ap.add_argument("--stash-dtype", default="",
+                    choices=["", "float32", "bfloat16"],
+                    help="Pallas LSTM residual-stash dtype (bfloat16 "
+                         "halves the gate/cell stash HBM)")
+    ap.add_argument("--var-len", action="store_true",
+                    help="variable-length utterances: batches carry a "
+                         "'lengths' key, loss/BLSTM/aggregation mask "
+                         "padded frames (lstm family only)")
+    ap.add_argument("--bucket", action="store_true",
+                    help="length-bucketed batching (implies --var-len): "
+                         "sort utterances within a shuffle window so each "
+                         "batch pads to its own rounded max length; "
+                         "distinct padded lengths each compile once")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if args.block_b or args.vmem_budget_mb:
+    if args.block_b or args.vmem_budget_mb or args.stash_dtype:
         import dataclasses
         changes = {}
         if args.block_b:
             changes["lstm_block_b"] = args.block_b
         if args.vmem_budget_mb:
             changes["lstm_vmem_budget_mb"] = args.vmem_budget_mb
+        if args.stash_dtype:
+            changes["lstm_stash_dtype"] = args.stash_dtype
         cfg = dataclasses.replace(cfg, **changes)
     seq_len = args.seq_len or (21 if cfg.family == "lstm" else 128)
     n_learners = args.learners if args.learners is not None else cfg.n_learners
@@ -145,17 +160,28 @@ def main(argv=None):
         except FileNotFoundError:
             pass
 
-    ds = make_dataset(cfg, seq_len=seq_len, batch=batch, seed=args.seed)
+    ds = make_dataset(cfg, seq_len=seq_len, batch=batch, seed=args.seed,
+                      var_len=args.var_len or args.bucket,
+                      bucket=args.bucket)
     pf = Prefetcher(ds, start_step=start)
     t0 = time.time()
+    valid_frames = padded_frames = 0
     with use_mesh(meta["mesh"]):
         for k in range(start, args.steps):
             batch_np = pf.next()
+            if "lengths" in batch_np:
+                valid_frames += int(batch_np["lengths"].sum())
+                padded_frames += (batch_np["features"].shape[0]
+                                  * batch_np["features"].shape[1])
             state, metrics = jit_step(state, batch_np)
             if k % args.log_every == 0:
                 loss = float(metrics["loss"])
                 line = (f"step {k:5d} loss {loss:.4f} "
                         f"({(time.time()-t0):.1f}s)")
+                if padded_frames:
+                    # padding efficiency: valid / (B * Tpad) frames —
+                    # bucketing exists to push this toward 1.0
+                    line += f" pad_eff {valid_frames/padded_frames:.2f}"
                 if "consensus" in metrics:
                     line += f" consensus {float(metrics['consensus']):.3e}"
                 print(line, flush=True)

@@ -85,15 +85,32 @@ def sinusoidal_positions(positions, d_model: int):
 # Losses
 # ---------------------------------------------------------------------------
 
-def cross_entropy(logits, labels, z_loss: float = 0.0):
-    """Token-level CE; logits (..., V) any float dtype, labels (...) int."""
+def sequence_mask(lengths, max_len: int):
+    """(B,) int lengths -> (B, max_len) bool validity mask.
+
+    True at frames t < lengths[b] — the shared definition of "valid frame"
+    used by the masked loss, the length-aware BLSTM, and CTC input
+    masking (see the ``lengths`` batch contract in ``repro.data.pipeline``).
+    """
+    return jnp.arange(max_len)[None, :] < lengths[:, None]
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0, mask=None):
+    """Token-level CE; logits (..., V) any float dtype, labels (...) int.
+
+    With ``mask`` (bool, same shape as labels) the loss is the sum over
+    valid positions divided by the valid count — NOT the padded B*T mean —
+    so padded frames neither dilute the loss nor leak into gradients."""
     lf = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(lf, axis=-1)
     ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
     loss = lse - ll
     if z_loss:
         loss = loss + z_loss * jnp.square(lse)
-    return jnp.mean(loss)
+    if mask is None:
+        return jnp.mean(loss)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(loss * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
 # ---------------------------------------------------------------------------

@@ -4,13 +4,18 @@ acoustic-model substrate covers both.
 
 Standard alpha (forward) recursion over the blank-extended label sequence,
 in log space, time steps via ``lax.scan``.  Supports per-sequence label
-lengths (padded with -1).  Oracle: brute-force alignment enumeration in
-tests/test_ctc.py.
+lengths (padded with -1) and per-sequence INPUT lengths (right-padded
+frames, the ``lengths`` batch contract of ``repro.data.pipeline``): the
+alpha recursion freezes beyond each sequence's last valid frame, which is
+exactly the NLL of the truncated unpadded sequence.  Oracle: brute-force
+alignment enumeration in tests/test_ctc.py.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.models.common import sequence_mask
 
 NEG = -1e30
 
@@ -21,15 +26,21 @@ def _logsumexp3(a, b, c):
     return m + jnp.log(jnp.exp(a - m) + jnp.exp(b - m) + jnp.exp(c - m))
 
 
-def ctc_loss(logits, labels, label_lengths=None, *, blank: int = 0):
+def ctc_loss(logits, labels, label_lengths=None, *, blank: int = 0,
+             input_lengths=None):
     """logits: (B, T, V); labels: (B, U) int32 (pad with -1 beyond length);
-    label_lengths: (B,) int32 (default: count of non-negative labels).
+    label_lengths: (B,) int32 (default: count of non-negative labels);
+    input_lengths: (B,) int32 valid frame count per row (default: all T
+    frames) — frames at t >= input_lengths[b] are excluded from the
+    recursion, matching the unpadded per-sequence NLL.
     Returns mean negative log likelihood over the batch."""
     B, T, V = logits.shape
     U = labels.shape[1]
     if label_lengths is None:
         label_lengths = jnp.sum(labels >= 0, axis=1)
     labels = jnp.maximum(labels, 0)
+    frame_ok = (None if input_lengths is None
+                else sequence_mask(input_lengths, T))       # (B, T)
 
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
 
@@ -56,9 +67,13 @@ def ctc_loss(logits, labels, label_lengths=None, *, blank: int = 0):
         prev1 = jnp.pad(alpha, ((0, 0), (1, 0)), constant_values=NEG)[:, :S]
         prev2 = jnp.pad(alpha, ((0, 0), (2, 0)), constant_values=NEG)[:, :S]
         prev2 = jnp.where(can_skip, prev2, NEG)
-        alpha = _logsumexp3(alpha, prev1, prev2) + emit(t)
-        alpha = jnp.where(valid, alpha, NEG)
-        return alpha, None
+        new = _logsumexp3(alpha, prev1, prev2) + emit(t)
+        new = jnp.where(valid, new, NEG)
+        if frame_ok is not None:
+            # padded frame: freeze alpha, so the final read equals the
+            # recursion stopped at the row's last valid frame
+            new = jnp.where(frame_ok[:, t][:, None], new, alpha)
+        return new, None
 
     alpha, _ = jax.lax.scan(step, alpha0, jnp.arange(1, T))
 

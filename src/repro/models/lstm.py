@@ -4,13 +4,31 @@ linear bottleneck and a 32,000-way CD-HMM-state softmax (Cui et al. §V).
 The LSTM cell is the compute hot-spot the Pallas kernel in
 ``repro.kernels.lstm_cell`` fuses (gate matmuls + elementwise); this module
 doubles as its pure-jnp oracle through ``repro.kernels.ref``.
+
+Variable-length utterances (the ``lengths`` batch contract)
+-----------------------------------------------------------
+``forward``/``loss_train`` accept right-padded batches with a per-row
+valid-length vector ``lengths`` (B,) — the contract emitted by
+``repro.data.pipeline`` with ``var_len=True``.  Masking semantics, shared
+bit-for-bit by the jax scan and the Pallas kernels:
+
+* on padded steps (t >= lengths[b]) the recurrent (h, c) carry is FROZEN
+  (not updated), so padded frames cannot enter any weight gradient;
+* the layer output at padded frames is 0, so the next layer sees zeroed
+  padding exactly like the input layer did;
+* the backward direction therefore reverses *within* each utterance's
+  valid span: right-padding means its leading invalid segment carries the
+  zero initial state untouched until the last valid frame;
+* the loss is normalized by the number of valid frames, not B*T.
+
+When ``lengths`` is None every path reduces to the rectangular behavior.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import cross_entropy
+from repro.models.common import cross_entropy, sequence_mask
 from repro.sharding import ParamSpec
 
 
@@ -25,15 +43,20 @@ def lstm_cell_step(wx, wh, b, x_t, h, c):
 
 
 def _kernel_knobs(cfg):
-    """(block_b, vmem_budget) for the Pallas LSTM kernels from cfg."""
+    """(block_b, vmem_budget, stash_dtype) for the Pallas LSTM kernels."""
     block_b = getattr(cfg, "lstm_block_b", 0) or None
     budget_mb = getattr(cfg, "lstm_vmem_budget_mb", 0)
-    return block_b, (budget_mb * 2 ** 20 if budget_mb else None)
+    stash = getattr(cfg, "lstm_stash_dtype", "float32") or "float32"
+    return block_b, (budget_mb * 2 ** 20 if budget_mb else None), stash
 
 
-def lstm_layer(p, x, *, reverse: bool = False, kernel_impl: str = "jax",
-               block_b: int = None, vmem_budget: int = None):
-    """x: (B,T,D_in) -> (B,T,H)."""
+def lstm_layer(p, x, *, lengths=None, reverse: bool = False,
+               kernel_impl: str = "jax", block_b: int = None,
+               vmem_budget: int = None, stash_dtype: str = None):
+    """x: (B,T,D_in) -> (B,T,H).
+
+    ``lengths`` (B,) int enables the masked recurrence (carry frozen and
+    output zeroed at t >= lengths[b]; see module docstring)."""
     B, T, _ = x.shape
     H = p["wh"].shape[0]
     h0 = jnp.zeros((B, H), x.dtype)
@@ -41,16 +64,33 @@ def lstm_layer(p, x, *, reverse: bool = False, kernel_impl: str = "jax",
 
     if kernel_impl == "pallas":
         from repro.kernels.ops import lstm_sequence
-        return lstm_sequence(p["wx"], p["wh"], p["b"], x, reverse=reverse,
-                             block_b=block_b, vmem_budget=vmem_budget)
+        return lstm_sequence(p["wx"], p["wh"], p["b"], x, lengths,
+                             reverse=reverse, block_b=block_b,
+                             vmem_budget=vmem_budget,
+                             stash_dtype=stash_dtype)
 
-    def step(carry, x_t):
+    if lengths is None:
+        def step(carry, x_t):
+            h, c = carry
+            h, c = lstm_cell_step(p["wx"], p["wh"], p["b"], x_t, h, c)
+            return (h, c), h
+
+        xs = jnp.moveaxis(x, 1, 0)
+        (_, _), hs = jax.lax.scan(step, (h0, c0), xs, reverse=reverse)
+        return jnp.moveaxis(hs, 0, 1)
+
+    def step(carry, inp):
+        x_t, t = inp
         h, c = carry
-        h, c = lstm_cell_step(p["wx"], p["wh"], p["b"], x_t, h, c)
-        return (h, c), h
+        h2, c2 = lstm_cell_step(p["wx"], p["wh"], p["b"], x_t, h, c)
+        v = (t < lengths)[:, None]
+        h = jnp.where(v, h2, h)                       # freeze the carry
+        c = jnp.where(v, c2, c)
+        return (h, c), jnp.where(v, h2, jnp.zeros_like(h2))
 
     xs = jnp.moveaxis(x, 1, 0)
-    (_, _), hs = jax.lax.scan(step, (h0, c0), xs, reverse=reverse)
+    (_, _), hs = jax.lax.scan(step, (h0, c0), (xs, jnp.arange(T)),
+                              reverse=reverse)
     return jnp.moveaxis(hs, 0, 1)
 
 
@@ -91,24 +131,32 @@ def param_specs(cfg):
     }
 
 
-def forward(cfg, params, features, *, kernel_impl: str = "jax"):
+def forward(cfg, params, features, lengths=None, *,
+            kernel_impl: str = "jax"):
     """features: (B, T, input_dim) -> logits (B, T, vocab).
 
     The pallas path runs each bi-LSTM layer as ONE fused kernel
     invocation (both directions' weights resident in VMEM, x handed to
-    the kernel once) instead of two sequential direction passes."""
+    the kernel once) instead of two sequential direction passes.
+
+    ``lengths`` (B,) int threads the masked recurrence through every
+    layer (frozen carries + zeroed padded outputs; module docstring)."""
     x = features.astype(jnp.bfloat16)
-    block_b, vmem_budget = _kernel_knobs(cfg)
+    block_b, vmem_budget, stash_dtype = _kernel_knobs(cfg)
     for i in range(cfg.n_layers):
         p = params["layers"][f"layer_{i}"]
         if kernel_impl == "pallas":
             from repro.kernels.ops import blstm_sequence
             x = blstm_sequence(p["fwd"]["wx"], p["fwd"]["wh"], p["fwd"]["b"],
                                p["bwd"]["wx"], p["bwd"]["wh"], p["bwd"]["b"],
-                               x, block_b=block_b, vmem_budget=vmem_budget)
+                               x, lengths, block_b=block_b,
+                               vmem_budget=vmem_budget,
+                               stash_dtype=stash_dtype)
             continue
-        fwd = lstm_layer(p["fwd"], x, kernel_impl=kernel_impl)
-        bwd = lstm_layer(p["bwd"], x, reverse=True, kernel_impl=kernel_impl)
+        fwd = lstm_layer(p["fwd"], x, lengths=lengths,
+                         kernel_impl=kernel_impl)
+        bwd = lstm_layer(p["bwd"], x, lengths=lengths, reverse=True,
+                         kernel_impl=kernel_impl)
         x = jnp.concatenate([fwd, bwd], axis=-1)
     x = jnp.einsum("btd,dk->btk", x, params["bottleneck"])
     logits = (jnp.einsum("btk,kv->btv", x, params["softmax_w"])
@@ -117,5 +165,12 @@ def forward(cfg, params, features, *, kernel_impl: str = "jax"):
 
 
 def loss_train(cfg, params, batch, *, kernel_impl: str = "jax"):
-    logits = forward(cfg, params, batch["features"], kernel_impl=kernel_impl)
-    return cross_entropy(logits, batch["labels"])
+    """Frame-level CE.  If the batch carries ``lengths``, padded frames are
+    excluded and the loss normalizes by the valid-frame count (the masked
+    contract of ``repro.data.pipeline``)."""
+    lengths = batch.get("lengths")
+    logits = forward(cfg, params, batch["features"], lengths,
+                     kernel_impl=kernel_impl)
+    mask = (None if lengths is None
+            else sequence_mask(lengths, logits.shape[1]))
+    return cross_entropy(logits, batch["labels"], mask=mask)
