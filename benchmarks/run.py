@@ -26,7 +26,88 @@ def all_benches():
         ("compression", T.bench_compression),
         ("kernel_microbench", _kernel_microbench),
         ("varlen_bucketing", _varlen_bucketing),
+        ("longseq", _longseq),
     ]
+
+
+def _longseq():
+    """Long-utterance trajectory across T in {500, 2000, 8000} (paper
+    shape B=256, H=512/direction): residual-stash HBM of the training
+    forward, unchunked vs --seq-chunk (accounting single-source:
+    kernels.lstm_cell.stash_bytes, auto_tile picks (block_b, K) from the
+    12MB default budget); masked-BLSTM valid-frames/s through the jitted
+    jax-scan grad at a reduced shape; and a chunked-vs-unchunked pallas
+    fwd+bwd timing (interpret mode — relative trajectory, not TPU
+    numbers)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.lstm_cell import (auto_tile, blstm_sequence,
+                                         stash_bytes)
+
+    rows = []
+    B, H, D = 256, 512, 260
+    for T in (500, 2000, 8000):
+        full = stash_bytes(B, T, H, n_dir=2)
+        _, K = auto_tile(B, T, D, H, 2, n_dir=2, seq_chunk=-1)
+        chunked = stash_bytes(B, T, H, n_dir=2, seq_chunk=K)
+        rows.append((f"longseq/stash_mb_T{T}_full", full / 2 ** 20,
+                     "MB fwd residual stash, f32, both directions"))
+        rows.append((f"longseq/stash_mb_T{T}_chunked", chunked / 2 ** 20,
+                     f"MB boundary carries, seq_chunk={K}"))
+        rows.append((f"longseq/stash_ratio_T{T}", chunked / full,
+                     "chunked/unchunked (acceptance: <= 0.25)"))
+
+    # valid-frames/s of the masked fwd+bwd at long T (jax scan path; the
+    # pallas trajectory below is interpret-mode and not frames/s-meaningful)
+    key = jax.random.PRNGKey(0)
+    Br, Dr, Hr = 8, 16, 32
+    wf = [(jax.random.normal(key, s, jnp.float32) * 0.3).astype(jnp.float32)
+          for s in ((Dr, 4 * Hr), (Hr, 4 * Hr), (4 * Hr,))]
+    wb = [(jax.random.normal(key, s, jnp.float32) * 0.3).astype(jnp.float32)
+          for s in ((Dr, 4 * Hr), (Hr, 4 * Hr), (4 * Hr,))]
+    from repro.kernels import ref
+
+    for T in (500, 2000):
+        x = jax.random.normal(key, (Br, T, Dr), jnp.float32)
+        lens = jnp.clip(jax.random.randint(key, (Br,), T // 2, T), 1, T)
+
+        def loss(wxf, whf, bf, wxb, whb, bb, x):
+            y = ref.blstm_ref(wxf, whf, bf, wxb, whb, bb, x, lengths=lens)
+            return jnp.mean(jnp.square(y.astype(jnp.float32)))
+
+        g = jax.jit(jax.value_and_grad(loss, argnums=tuple(range(7))))
+        args = (*wf, *wb, x)
+        jax.block_until_ready(g(*args))       # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(g(*args))
+        dt = (time.perf_counter() - t0) / 3
+        rows.append((f"longseq/jax_valid_kframes_per_s_T{T}",
+                     float(lens.sum()) / dt / 1e3,
+                     "masked fwd+bwd, jax scan, cpu"))
+
+    # chunked vs unchunked pallas fwd+bwd (interpret): tracks the relative
+    # cost of the extra recompute forward on a small shape
+    Bk, Tk, Kk = 4, 64, 16
+    x = jax.random.normal(key, (Bk, Tk, Dr), jnp.float32)
+    lens = jnp.array([64, 40, 23, 9], jnp.int32)
+    for name, chunk in (("unchunked", 0), (f"chunk{Kk}", Kk)):
+        def loss(wxf, whf, bf, wxb, whb, bb, x, chunk=chunk):
+            y = blstm_sequence(wxf, whf, bf, wxb, whb, bb, x, lens,
+                               interpret=True, seq_chunk=chunk)
+            return jnp.mean(jnp.square(y.astype(jnp.float32)))
+
+        g = jax.jit(jax.value_and_grad(loss, argnums=tuple(range(7))))
+        args = (*wf, *wb, x)
+        jax.block_until_ready(g(*args))
+        t0 = time.perf_counter()
+        for _ in range(2):
+            jax.block_until_ready(g(*args))
+        rows.append((f"longseq/pallas_interp_fwd_bwd_{name}_ms",
+                     (time.perf_counter() - t0) / 2 * 1e3,
+                     f"B={Bk} T={Tk} interpret cpu"))
+    return rows
 
 
 def _varlen_bucketing():

@@ -98,6 +98,13 @@ class ArchConfig:
     # bf16 halves the ~55MB/direction gate/cell stash at ~1e-2 normalized
     # gradient error (see kernels/lstm_cell.py 'Residual stashing').
     lstm_stash_dtype: str = "float32"
+    # sequence-chunked recompute for long utterances: 0 = per-step stash,
+    # K > 0 = stash only (h, c) chunk-entry carries every K frames and
+    # rebuild gate residuals in VMEM in the backward (O(T/K) stash HBM at
+    # the cost of one extra forward pass), -1 = auto-tune (block_b, K)
+    # jointly from the VMEM budget (kernels/lstm_cell.py 'Sequence-chunked
+    # recompute', docs/kernels.md).
+    lstm_seq_chunk: int = 0
 
     # distribution defaults (see repro/core/strategies.py and DESIGN.md)
     train_strategy: str = "sd_psgd"   # sc_psgd | sd_psgd | ad_psgd | bmuf | hring

@@ -30,6 +30,10 @@ SWB2000_BLSTM = register(
         # (see kernels/lstm_cell.py docstring for the byte math).
         lstm_block_b=0,        # 0 -> auto from the VMEM budget
         lstm_vmem_budget_mb=12,
+        # at the paper's T=21 the per-step residual stash is cheap; for
+        # long-utterance runs set lstm_seq_chunk (--seq-chunk) to trade
+        # one recompute forward for an O(T/K) stash (docs/kernels.md)
+        lstm_seq_chunk=0,
         # frame classifier: no autoregressive decode step
         skip_shapes=("prefill_32k", "decode_32k", "long_500k"),
         train_strategy="ad_psgd",

@@ -39,6 +39,11 @@ balancing, Table II/III) are studied with the discrete-event simulator in
 Learner replicas are a stacked leading axis sharded over the mesh
 ('data' axis on one pod; 'pod' axis for hring), so each chip only ever
 holds its own learner's shard — replication costs no extra HBM per chip.
+
+Variable-length batches (the ``lengths`` key of repro.data.pipeline) are
+aggregated with *frame weights*: each learner's/microbatch's masked-mean
+gradient is scaled by its valid-frame share so uniform mixing equals the
+global masked gradient — the normative contract lives in docs/data.md.
 """
 from __future__ import annotations
 

@@ -32,7 +32,9 @@ Downstream consumers (``models/lstm.py``, ``models/common.cross_entropy``,
 ``core/strategies.py``) treat frames at t >= lengths[b] as padding: they
 are masked out of the loss, frozen out of the BLSTM recurrence, and
 excluded from gradient aggregation.  Fixed-length batches simply omit the
-key — the absence of ``lengths`` *is* the rectangular contract.
+key — the absence of ``lengths`` *is* the rectangular contract.  The
+normative statement of the contract (and the frame-weighted aggregation
+it implies) is docs/data.md; this docstring is the emitter's view.
 
 Length-bucketed batch construction (``bucket=True``) mirrors the paper's
 loader (§IV-D) and Zhang et al. 1907.05701: utterances are generated in a

@@ -77,9 +77,47 @@ alternative — recomputing gates in the backward — saves that HBM
 traffic but re-runs both matmuls (2/3 of the step FLOPs) and still has
 to stash or recompute the cell-state sequence for df/dc; on TPU the
 matmul units are the scarce resource for this skinny shape, so we trade
-HBM capacity for MXU time (same choice cuDNN makes).  Revisit if T
-grows beyond a few hundred frames (then a seq-chunked recompute —
-stash c every K steps, recompute gates within a chunk — wins).
+HBM capacity for MXU time (same choice cuDNN makes) *at the paper's
+T=21*.  For long utterances that trade flips — see next section.
+
+Sequence-chunked recompute (``seq_chunk``)
+------------------------------------------
+Conversational utterances run to thousands of frames; an O(T) residual
+stash caps sequence length well below that operating point.  With
+``seq_chunk=K`` (> 0, frames per chunk; -1 lets :func:`auto_tile` pick
+``(block_b, K)`` jointly from the VMEM budget) the training forward
+stashes only the (h, c) carries at each chunk *entry* — 2H floats per
+(row, chunk) instead of 5H per (row, step), an O(T) -> O(T/K)
+reduction — and the backward kernel walks a ``(B//bB, T/K)`` grid in
+reverse chunk order: each grid step re-runs the forward for its K-frame
+chunk entirely in VMEM (rebuilding the gate/cell residuals in scratch),
+then runs the K reverse-recurrence steps against them, carrying
+(dh, dc) across chunks in scratch exactly like the per-step kernel.
+Cost: one extra forward pass worth of matmuls, independent of K; K only
+trades VMEM (the chunk residual scratch is ``bB*K*6H`` f32) against the
+boundary-stash size.  T that doesn't divide by K is zero-padded to the
+next multiple and the padded steps masked off via a synthesized
+``lengths`` vector, so the chunked path always runs the masked kernels
+(lengths = T everywhere reproduces the dense recurrence exactly).
+:func:`stash_bytes` is the accounting single-source (benchmarks and the
+stash-size tests read it).
+
+Fused multi-layer stack (``blstm_stack_sequence``)
+--------------------------------------------------
+The stacked BLSTM's inter-layer h traffic round-trips HBM once per
+layer.  :func:`blstm_stack_sequence` runs the whole L-layer stack as ONE
+kernel on a ``(B//bB, L, T)`` grid: layer l writes its (bB, T, 2H)
+output into a VMEM ping-pong buffer that layer l+1 reads directly, so
+only layer 0's input and layer L-1's output touch HBM.  (A *streaming*
+cross-layer fusion is impossible for bidirectional layers — layer l+1
+at time 0 needs layer l's reverse output at time 0, computed at the
+last grid step — hence the buffer holds the full T.)  Per-direction
+math is op-for-op the single-layer kernel, so the fused stack is
+bit-identical to the per-layer loop.  Under ``jax.vjp`` the custom-VJP
+rules fall back to the per-layer stashing forwards/backwards (each
+layer's output is a residual the backward needs anyway), composing with
+``seq_chunk`` and ``lengths``; the fused kernel serves the primal
+(inference) call.  See docs/kernels.md for the full contracts.
 
 VMEM budget and ``block_b`` auto-tuning
 ---------------------------------------
@@ -126,6 +164,20 @@ def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
+def _fit_block_b(B: int, usage, budget: int) -> int:
+    """The shared batch-tile search of every tuner: start from the
+    power-of-two cover of B, halve while ``usage(bb)`` overruns the
+    budget, floor at 8 rows (the f32 sublane tile — below that the
+    weights themselves are the problem, not the tile), and never pad a
+    single tile past the 8-row sublane multiple."""
+    bb = max(8, 1 << (max(B, 1) - 1).bit_length())
+    while bb > 8 and usage(bb) > budget:
+        bb //= 2
+    if bb >= B:
+        bb = max(8, _round_up(B, 8))
+    return bb
+
+
 def auto_block_b(B: int, D: int, H: int, itemsize: int, *, n_dir: int = 1,
                  training: bool = False, vmem_budget: int = None,
                  stash_itemsize: int = 4) -> int:
@@ -158,14 +210,82 @@ def auto_block_b(B: int, D: int, H: int, itemsize: int, *, n_dir: int = 1,
                + 2 * bb * H * 4)
         return max(fwd, bwd)
 
-    bb = max(8, 1 << (max(B, 1) - 1).bit_length())
-    while bb > 8 and usage(bb) > budget:
-        bb //= 2
-    if bb >= B:
-        # single tile: don't pad past the sublane multiple (B=96 should
-        # run as one 96-row tile, not a zero-padded 128-row one)
-        bb = max(8, _round_up(B, 8))
-    return bb
+    return _fit_block_b(B, usage, budget)
+
+
+def stash_bytes(B: int, T: int, H: int, *, n_dir: int = 1,
+                stash_itemsize: int = 4, seq_chunk: int = 0) -> int:
+    """Residual-stash HBM bytes of the training forward (the accounting
+    single-source for benchmarks/run.py --only longseq and the stash-size
+    tests).  Unchunked: post-activation gates (4H) + cell states (H) per
+    (row, step).  Chunked: only the (h, c) chunk-entry carries — 2H per
+    (row, chunk), ceil(T / seq_chunk) chunks after time padding."""
+    if seq_chunk and seq_chunk > 0:
+        n_chunks = -(-T // seq_chunk)
+        return n_dir * B * n_chunks * 2 * H * stash_itemsize
+    return n_dir * B * T * 5 * H * stash_itemsize
+
+
+def _chunked_usage(bb, K, D, H, itemsize, n_dir, stash_itemsize):
+    """Worst single-kernel VMEM resident set of the chunked training pair
+    (chunk-stash forward vs chunked-recompute backward) — the byte math
+    behind :func:`auto_tile`; docs/kernels.md walks through it."""
+    wparams = D * 4 * H + H * 4 * H + 4 * H
+    fwd = (n_dir * wparams * itemsize            # weights, all directions
+           + 2 * n_dir * bb * (D + H) * itemsize  # x/y streams
+           + n_dir * 2 * bb * H * 4               # (h, c) carries
+           + 2 * n_dir * bb * H * stash_itemsize)  # boundary-carry blocks
+    bwd = (wparams * (itemsize + 4)              # one direction + f32 dW
+           + bb * K * (2 * D + H) * itemsize     # x/dx/dy chunk blocks
+           + bb * K * 6 * H * 4                  # gate/h/c chunk scratch
+           + 2 * bb * H * 4                      # (dh, dc) carries
+           + 2 * bb * H * stash_itemsize)        # boundary-carry blocks
+    return max(fwd, bwd)
+
+
+def auto_tile(B: int, T: int, D: int, H: int, itemsize: int, *,
+              n_dir: int = 1, vmem_budget: int = None,
+              stash_itemsize: int = 4, seq_chunk: int = -1,
+              block_b: int = None):
+    """Jointly pick ``(block_b, seq_chunk)`` for the chunked TRAINING
+    kernels so the worse of (chunk-stash forward, chunked-recompute
+    backward) fits the VMEM budget.
+
+    ``seq_chunk > 0`` fixes the chunk length (clamped to T) and only
+    ``block_b`` is tuned; ``seq_chunk = -1`` starts from
+    min(256, next_pow2(T)) and halves the chunk first (chunk length only
+    trades VMEM — the recompute cost is one extra forward pass regardless
+    of K), then the batch tile, flooring at K=16 frames and bb=8 rows;
+    finally K is halved further while the time padding it induces
+    (round_up(T, K) - T) exceeds T/8, so an unlucky T cannot waste a
+    large fraction of every chunked pass on masked-off steps.  An
+    explicit ``block_b`` is respected and only K is tuned."""
+    if not seq_chunk:
+        return (block_b or auto_block_b(
+            B, D, H, itemsize, n_dir=n_dir, training=True,
+            vmem_budget=vmem_budget, stash_itemsize=stash_itemsize)), 0
+    budget = vmem_budget or DEFAULT_VMEM_BUDGET
+    T = max(T, 1)
+    fixed_k = seq_chunk > 0
+    K = min(seq_chunk, T) if fixed_k else min(
+        256, 1 << (T - 1).bit_length())
+    bb = block_b or max(8, 1 << (max(B, 1) - 1).bit_length())
+
+    def usage(bb, K):
+        return _chunked_usage(bb, K, D, H, itemsize, n_dir, stash_itemsize)
+
+    while usage(bb, K) > budget:
+        if not fixed_k and K > 16:
+            K //= 2
+        elif block_b is None and bb > 8:
+            bb //= 2
+        else:
+            break   # floor: the weights themselves overrun the budget
+    while not fixed_k and K > 16 and (_round_up(T, K) - T) * 8 > T:
+        K //= 2                        # bound the masked-padding waste
+    if block_b is None and bb >= B:
+        bb = max(8, _round_up(B, 8))   # single tile: sublane multiple only
+    return bb, K
 
 
 def _pad_rows(a, Bp):
@@ -173,6 +293,13 @@ def _pad_rows(a, Bp):
     if B == Bp:
         return a
     return jnp.pad(a, ((0, Bp - B),) + ((0, 0),) * (a.ndim - 1))
+
+
+def _pad_time(a, Tp):
+    T = a.shape[1]
+    if T == Tp:
+        return a
+    return jnp.pad(a, ((0, 0), (0, Tp - T)) + ((0, 0),) * (a.ndim - 2))
 
 
 def _stash_dtype(stash_dtype):
@@ -201,11 +328,37 @@ def _tile(x, n_dir: int, H: int, block_b, vmem_budget, *, training: bool,
 # forward kernels (inference / training-with-stash, uni- or bidirectional)
 # ---------------------------------------------------------------------------
 
-def _make_fwd_kernel(n_dir: int, stash: bool, revs=None):
+def _cell_math(x_t, hx, c_prev, wx, wh, b):
+    """The one LSTM cell step shared by every kernel body (single-layer
+    forward, chunked-recompute backward phase 1, fused stack): gate order
+    i|f|g|o, forget bias +1, f32 accumulation.  ``hx`` is the recurrent
+    input already rounded to the matmul dtype.  Returns the
+    post-activation gates and the updated (c, h).  Keep this the single
+    source — drift between kernel bodies would silently break the
+    bit-identity and grad-parity contracts rather than crash."""
+    gates = (
+        jax.lax.dot_general(x_t, wx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + jax.lax.dot_general(hx, wh, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+        + b[None, :]
+    )
+    H = wh.shape[-1] // 4
+    i = jax.nn.sigmoid(gates[:, 0 * H:1 * H])
+    f = jax.nn.sigmoid(gates[:, 1 * H:2 * H] + 1.0)
+    g = jnp.tanh(gates[:, 2 * H:3 * H])
+    o = jax.nn.sigmoid(gates[:, 3 * H:4 * H])
+    c = f * c_prev + i * g
+    return i, f, g, o, c, o * jnp.tanh(c)
+
+def _make_fwd_kernel(n_dir: int, stash: bool, revs=None, chunk: int = 0):
     """Kernel body over refs laid out as:
 
     inputs:  x * n_dir, then (wx, wh, b) * n_dir, then lengths if masked
     outputs: y * n_dir, then (acts, cseq) * n_dir if ``stash``
+             (with ``chunk`` > 0 the per-step (acts, cseq) pair becomes
+             the per-chunk (h_bound, c_bound) entry-carry pair, written
+             once per chunk on its first grid step)
     scratch: (h, c) * n_dir
 
     ``revs`` enables masking: it carries each direction's reverse flag so
@@ -238,21 +391,20 @@ def _make_fwd_kernel(n_dir: int, stash: bool, revs=None):
             x = x_refs[d][...]
             h = h_ref[...]
             c_prev = c_ref[...]
-            gates = (
-                jax.lax.dot_general(x, wx_ref[...], (((1,), (0,)), ((), ())),
-                                    preferred_element_type=jnp.float32)
-                + jax.lax.dot_general(h.astype(x.dtype), wh_ref[...],
-                                      (((1,), (0,)), ((), ())),
-                                      preferred_element_type=jnp.float32)
-                + b_ref[...][None, :]
-            )
-            H = h_ref.shape[-1]
-            i = jax.nn.sigmoid(gates[:, 0 * H:1 * H])
-            f = jax.nn.sigmoid(gates[:, 1 * H:2 * H] + 1.0)
-            g = jnp.tanh(gates[:, 2 * H:3 * H])
-            o = jax.nn.sigmoid(gates[:, 3 * H:4 * H])
-            c = f * c_prev + i * g
-            h_new = o * jnp.tanh(c)
+            if stash and chunk:
+                # stash the chunk-ENTRY carry on the chunk's first step;
+                # the output block's index map (t // chunk) keeps it
+                # resident for the remaining chunk-1 visits
+                hb_ref = out_refs[n_dir + 2 * d]
+                cb_ref = out_refs[n_dir + 2 * d + 1]
+
+                @pl.when(t % chunk == 0)
+                def _bound(hb_ref=hb_ref, cb_ref=cb_ref, h=h, c=c_prev):
+                    hb_ref[...] = h.astype(hb_ref.dtype)
+                    cb_ref[...] = c.astype(cb_ref.dtype)
+            i, f, g, o, c, h_new = _cell_math(
+                x, h.astype(x.dtype), c_prev, wx_ref[...], wh_ref[...],
+                b_ref[...])
             if masked:
                 time_idx = (T - 1 - t) if revs[d] else t
                 vm = (time_idx < lens)[:, None]
@@ -264,7 +416,7 @@ def _make_fwd_kernel(n_dir: int, stash: bool, revs=None):
             c_ref[...] = c
             h_ref[...] = h_new
             out_refs[d][...] = y.astype(out_refs[d].dtype)
-            if stash:
+            if stash and not chunk:
                 acts_ref = out_refs[n_dir + 2 * d]
                 cseq_ref = out_refs[n_dir + 2 * d + 1]
                 acts_ref[...] = jnp.concatenate(
@@ -281,7 +433,7 @@ def _xmap(T: int, reverse: bool):
 
 
 def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret,
-             lengths=None, stash_dtype=None):
+             lengths=None, stash_dtype=None, seq_chunk: int = 0):
     """Run the forward kernel for one or two directions in one grid pass.
 
     ws: ((wx, wh, b), ...) per direction; revs: matching reverse flags.
@@ -289,11 +441,19 @@ def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret,
     batch tile get length 0).  Returns (outs, bb): outs is the flat
     pallas output list over the *padded* batch (y per direction, then
     (acts, cseq) pairs if stash, in ``stash_dtype``).
+
+    ``seq_chunk`` (resolved chunk length K > 0, stash only) switches the
+    per-step residual stash to per-chunk (h_bound, c_bound) entry
+    carries; the caller must have padded T to a multiple of K and passed
+    ``lengths`` (the chunked path is always masked).
     """
     B, T, D = x.shape
     H = ws[0][1].shape[0]
     n_dir = len(ws)
     sdt = _stash_dtype(stash_dtype)
+    if seq_chunk:
+        assert stash and lengths is not None and T % seq_chunk == 0, \
+            (stash, lengths is None, T, seq_chunk)
     bb, Bp = _tile(x, n_dir, H, block_b, vmem_budget, training=stash,
                    stash_itemsize=sdt.itemsize)
     xp = _pad_rows(x, Bp)
@@ -316,7 +476,14 @@ def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret,
 
     out_specs = [pl.BlockSpec((bb, None, H), _xmap(T, rev)) for rev in revs]
     out_shape = [jax.ShapeDtypeStruct((Bp, T, H), x.dtype) for _ in revs]
-    if stash:
+    if stash and seq_chunk:
+        K = seq_chunk
+        for _ in revs:
+            # chunk-entry (h, c) carries; grid step t writes chunk t // K
+            out_specs += [pl.BlockSpec((bb, None, H),
+                                       lambda ib, t: (ib, t // K, 0))] * 2
+            out_shape += [jax.ShapeDtypeStruct((Bp, T // K, H), sdt)] * 2
+    elif stash:
         for rev in revs:
             out_specs += [pl.BlockSpec((bb, None, 4 * H), _xmap(T, rev)),
                           pl.BlockSpec((bb, None, H), _xmap(T, rev))]
@@ -330,7 +497,8 @@ def _run_fwd(ws, x, revs, *, stash: bool, block_b, vmem_budget, interpret,
 
     outs = pl.pallas_call(
         _make_fwd_kernel(n_dir, stash,
-                         revs if lengths is not None else None),
+                         revs if lengths is not None else None,
+                         chunk=seq_chunk),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -510,6 +678,185 @@ def _run_bwd(wx, wh, xp, yp, acts, cseq, dyp, *, reverse: bool, bb: int,
 
 
 # ---------------------------------------------------------------------------
+# chunked-recompute backward (one direction; grid walks chunks in reverse)
+# ---------------------------------------------------------------------------
+
+def _make_bwd_chunked_kernel(reverse: bool, K: int):
+    """One grid step = one K-frame chunk, processed in reverse recurrence
+    order (grid axis 1 index maps reverse the chunk axis).  Phase 1
+    re-runs the forward for the chunk from its stashed entry carry,
+    rebuilding the gate/cell residuals in VMEM scratch; phase 2 runs the
+    K reverse-recurrence steps against them, carrying (dh, dc) across
+    chunks in scratch and accumulating dWx/dWh/db into constant-mapped
+    f32 output blocks.  Always masked — the chunked wrapper synthesizes
+    ``lengths`` (= T) for dense inputs so time padding to a K multiple
+    stays exact."""
+
+    def kernel(dy_ref, x_ref, hb_ref, cb_ref, wx_ref, wh_ref, b_ref,
+               len_ref, dx_ref, dwx_ref, dwh_ref, db_ref,
+               g_scr, hp_scr, cp_scr, dh_ref, dc_ref):
+        ib = pl.program_id(0)
+        r = pl.program_id(1)
+        n = pl.num_programs(1)
+        H = dh_ref.shape[-1]
+
+        @pl.when(r == 0)
+        def _init_carry():
+            dh_ref[...] = jnp.zeros_like(dh_ref)
+            dc_ref[...] = jnp.zeros_like(dc_ref)
+
+        @pl.when((r == 0) & (ib == 0))
+        def _init_accum():
+            dwx_ref[...] = jnp.zeros_like(dwx_ref)
+            dwh_ref[...] = jnp.zeros_like(dwh_ref)
+            db_ref[...] = jnp.zeros_like(db_ref)
+
+        # real-time base of this grid step's x/dy/dx blocks (= block
+        # index * K; the recurrence chunk is n-1-r in both directions)
+        base = (r if reverse else n - 1 - r) * K
+        lens = len_ref[...]
+        b = b_ref[...]
+        xdt = x_ref.dtype
+        zero = jnp.zeros((dh_ref.shape[0], H), jnp.float32)
+
+        def _vm(lt):
+            return ((base + lt) < lens)[:, None]
+
+        # ---- phase 1: recompute the chunk's forward in VMEM ----------
+        # u walks the chunk in recurrence order; lt is the real-time
+        # position inside the block (the reverse direction's recurrence
+        # walks real time descending)
+        def fwd_body(u, hc):
+            h, c = hc
+            lt = (K - 1 - u) if reverse else u
+            x_t = x_ref[:, pl.ds(lt, 1), :][:, 0, :]
+            hx = h.astype(xdt)
+            hp_scr[:, pl.ds(lt, 1), :] = hx.astype(
+                jnp.float32)[:, None, :]
+            cp_scr[:, pl.ds(lt, 1), :] = c[:, None, :]
+            i, f, g, o, c_new, h_new = _cell_math(
+                x_t, hx, c, wx_ref[...], wh_ref[...], b)
+            g_scr[:, pl.ds(lt, 1), :] = jnp.concatenate(
+                [i, f, g, o], axis=-1)[:, None, :]
+            vm = _vm(lt)
+            return (jnp.where(vm, h_new, h), jnp.where(vm, c_new, c))
+
+        h0 = hb_ref[...].astype(jnp.float32)
+        c0 = cb_ref[...].astype(jnp.float32)
+        jax.lax.fori_loop(0, K, fwd_body, (h0, c0))
+
+        # ---- phase 2: reverse-recurrence backward over the chunk -----
+        wx = wx_ref[...].astype(jnp.float32)
+        wh = wh_ref[...].astype(jnp.float32)
+
+        def bwd_body(u, carry):
+            dh_c, dc_c = carry
+            s = K - 1 - u                       # recurrence-local step
+            lt = (K - 1 - s) if reverse else s
+            acts = g_scr[:, pl.ds(lt, 1), :][:, 0, :]
+            i = acts[:, 0 * H:1 * H]
+            f = acts[:, 1 * H:2 * H]
+            g = acts[:, 2 * H:3 * H]
+            o = acts[:, 3 * H:4 * H]
+            c_prev = cp_scr[:, pl.ds(lt, 1), :][:, 0, :]
+            vm = _vm(lt)
+            c = jnp.where(vm, f * c_prev + i * g, c_prev)
+            dh = dy_ref[:, pl.ds(lt, 1), :][:, 0, :].astype(
+                jnp.float32) + dh_c
+            tc = jnp.tanh(c)
+            dc = dh * o * (1.0 - tc * tc) + dc_c
+            dh = jnp.where(vm, dh, zero)
+            dc = jnp.where(vm, dc, zero)
+            dgates = jnp.concatenate([
+                dc * g * i * (1.0 - i),
+                dc * c_prev * f * (1.0 - f),
+                dc * i * (1.0 - g * g),
+                dh * tc * o * (1.0 - o),
+            ], axis=-1)
+            dx_ref[:, pl.ds(lt, 1), :] = jax.lax.dot_general(
+                dgates, wx, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(
+                    dx_ref.dtype)[:, None, :]
+            dh_new = jax.lax.dot_general(
+                dgates, wh, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dc_new = dc * f
+            x_t = x_ref[:, pl.ds(lt, 1), :][:, 0, :].astype(jnp.float32)
+            h_prev = hp_scr[:, pl.ds(lt, 1), :][:, 0, :]
+            dwx_ref[...] += jax.lax.dot_general(
+                x_t, dgates, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dwh_ref[...] += jax.lax.dot_general(
+                h_prev, dgates, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            db_ref[...] += jnp.sum(dgates, axis=0)
+            return (jnp.where(vm, dh_new, dh_c),
+                    jnp.where(vm, dc_new, dc_c))
+
+        dh_c, dc_c = jax.lax.fori_loop(
+            0, K, bwd_body, (dh_ref[...], dc_ref[...]))
+        dh_ref[...] = dh_c
+        dc_ref[...] = dc_c
+
+    return kernel
+
+
+def _run_bwd_chunked(wx, wh, b, xp, hbound, cbound, dyp, lengths_p, *,
+                     reverse: bool, bb: int, interpret):
+    """Chunked backward over padded arrays -> (dxp, dwx, dwh, db), f32
+    weight grads.  ``xp``/``dyp`` are row- and time-padded (T multiple of
+    the chunk length); ``hbound``/``cbound`` are the (Bp, n_chunks, H)
+    chunk-entry carries of the chunk-stash forward; ``lengths_p`` the
+    row-padded lengths (always present on the chunked path)."""
+    Bp, T, D = xp.shape
+    H = wh.shape[0]
+    n = hbound.shape[1]
+    K = T // n
+    assert Bp % bb == 0 and T % n == 0, (Bp, bb, T, n)
+
+    def cmap(ib, r):              # x/dy/dx chunk block, real-time order
+        return (ib, r, 0) if reverse else (ib, n - 1 - r, 0)
+
+    def bmap(ib, r):              # entry carries, recurrence-chunk order
+        return (ib, n - 1 - r, 0)
+
+    return pl.pallas_call(
+        _make_bwd_chunked_kernel(reverse, K),
+        grid=(Bp // bb, n),
+        in_specs=[
+            pl.BlockSpec((bb, K, H), cmap),           # dy chunk
+            pl.BlockSpec((bb, K, D), cmap),           # x chunk
+            pl.BlockSpec((bb, None, H), bmap),        # h entry carry
+            pl.BlockSpec((bb, None, H), bmap),        # c entry carry
+            pl.BlockSpec((D, 4 * H), lambda ib, r: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda ib, r: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda ib, r: (0,)),
+            pl.BlockSpec((bb,), lambda ib, r: (ib,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, K, D), cmap),
+            pl.BlockSpec((D, 4 * H), lambda ib, r: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda ib, r: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda ib, r: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, T, D), xp.dtype),
+            jax.ShapeDtypeStruct((D, 4 * H), jnp.float32),
+            jax.ShapeDtypeStruct((H, 4 * H), jnp.float32),
+            jax.ShapeDtypeStruct((4 * H,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb, K, 4 * H), jnp.float32),   # gate residuals
+            pltpu.VMEM((bb, K, H), jnp.float32),       # h_{t-1} (rounded)
+            pltpu.VMEM((bb, K, H), jnp.float32),       # c_{t-1}
+            pltpu.VMEM((bb, H), jnp.float32),          # dh carry
+            pltpu.VMEM((bb, H), jnp.float32),          # dc carry
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(dyp, xp, hbound, cbound, wx, wh, b, lengths_p)
+
+
+# ---------------------------------------------------------------------------
 # custom-VJP wiring: unidirectional
 # ---------------------------------------------------------------------------
 
@@ -521,9 +868,91 @@ def _len_cotangent(lengths):
     return np.zeros(lengths.shape, jax.dtypes.float0)
 
 
+def _run_fwd_train(ws, x, revs, lengths, *, interpret, block_b,
+                   vmem_budget, stash_dtype, seq_chunk):
+    """Stashing training forward shared by every custom-VJP fwd rule.
+
+    Returns (ys, res): ys are per-direction (B, T, H) outputs (trimmed),
+    res the residual tuple :func:`_run_bwd_train` consumes.  On the
+    chunked path (``seq_chunk`` != 0) x is zero-padded to a chunk
+    multiple of T, a full-T ``lengths`` is synthesized for dense inputs,
+    and the residuals are the (h, c) chunk-entry carries instead of the
+    per-step gate/cell stash."""
+    B, T, D = x.shape
+    H = ws[0][1].shape[0]
+    n_dir = len(ws)
+    sdt = _stash_dtype(stash_dtype)
+    if seq_chunk:
+        bb, K = auto_tile(B, T, D, H, jnp.dtype(x.dtype).itemsize,
+                          n_dir=n_dir, vmem_budget=vmem_budget,
+                          stash_itemsize=sdt.itemsize,
+                          seq_chunk=seq_chunk, block_b=block_b)
+        lens = (jnp.full((B,), T, jnp.int32) if lengths is None
+                else jnp.minimum(lengths.astype(jnp.int32), T))
+        outs, _ = _run_fwd(ws, _pad_time(x, _round_up(T, K)), revs,
+                           stash=True, block_b=bb,
+                           vmem_budget=vmem_budget, interpret=interpret,
+                           lengths=lens, stash_dtype=stash_dtype,
+                           seq_chunk=K)
+        ys = [outs[d][:B, :T] for d in range(n_dir)]
+        return ys, (x, lens, tuple(outs[n_dir:]))
+    outs, _ = _run_fwd(ws, x, revs, stash=True, block_b=block_b,
+                       vmem_budget=vmem_budget, interpret=interpret,
+                       lengths=lengths, stash_dtype=stash_dtype)
+    ys = [outs[d][:B] for d in range(n_dir)]
+    return ys, (x, lengths, tuple(outs))
+
+
+def _run_bwd_train(ws, res, dys, revs, *, interpret, block_b,
+                   vmem_budget, stash_dtype, seq_chunk):
+    """Backward shared by every custom-VJP bwd rule: one `_run_bwd` /
+    `_run_bwd_chunked` call per direction against the residuals of
+    :func:`_run_fwd_train`.  Returns (per-direction (dwx, dwh, db) f32,
+    dx summed over directions, trimmed, f32)."""
+    x, lengths, stash = res
+    B, T, D = x.shape
+    H = ws[0][1].shape[0]
+    n_dir = len(ws)
+    sdt = _stash_dtype(stash_dtype)
+    grads, dx = [], 0
+    if seq_chunk:
+        bb, K = auto_tile(B, T, D, H, jnp.dtype(x.dtype).itemsize,
+                          n_dir=n_dir, vmem_budget=vmem_budget,
+                          stash_itemsize=sdt.itemsize,
+                          seq_chunk=seq_chunk, block_b=block_b)
+        Bp = stash[0].shape[0]
+        assert Bp == _round_up(B, bb), (Bp, B, bb)
+        Tp = _round_up(T, K)
+        xp = _pad_rows(_pad_time(x, Tp), Bp)
+        lp = _pad_rows(lengths, Bp)
+        for d, ((wx, wh, b), rev) in enumerate(zip(ws, revs)):
+            dyp = _pad_rows(_pad_time(dys[d], Tp), Bp)
+            dxp, dwx, dwh, db = _run_bwd_chunked(
+                wx, wh, b, xp, stash[2 * d], stash[2 * d + 1], dyp, lp,
+                reverse=rev, bb=bb, interpret=interpret)
+            grads.append((dwx, dwh, db))
+            dx = dx + dxp[:B, :T].astype(jnp.float32)
+        return grads, dx
+    bb, Bp = _tile(x, n_dir, H, block_b, vmem_budget, training=True,
+                   stash_itemsize=sdt.itemsize)
+    assert Bp == stash[0].shape[0], (Bp, stash[0].shape)
+    xp = _pad_rows(x, Bp)
+    lp = (None if lengths is None
+          else _pad_rows(lengths.astype(jnp.int32), Bp))
+    for d, ((wx, wh, b), rev) in enumerate(zip(ws, revs)):
+        yp = stash[d]
+        acts, cseq = stash[n_dir + 2 * d], stash[n_dir + 2 * d + 1]
+        dxp, dwx, dwh, db = _run_bwd(
+            wx, wh, xp, yp, acts, cseq, _pad_rows(dys[d], Bp),
+            reverse=rev, bb=bb, interpret=interpret, lengths_p=lp)
+        grads.append((dwx, dwh, db))
+        dx = dx + dxp[:B].astype(jnp.float32)
+    return grads, dx
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _lstm_vjp(static, wx, wh, b, x, lengths):
-    reverse, interpret, block_b, vmem_budget, stash_dtype = static
+    reverse, interpret, block_b, vmem_budget = static[:4]
     outs, _ = _run_fwd(((wx, wh, b),), x, (reverse,), stash=False,
                        block_b=block_b, vmem_budget=vmem_budget,
                        interpret=interpret, lengths=lengths)
@@ -531,29 +960,28 @@ def _lstm_vjp(static, wx, wh, b, x, lengths):
 
 
 def _lstm_vjp_fwd(static, wx, wh, b, x, lengths):
-    reverse, interpret, block_b, vmem_budget, stash_dtype = static
-    outs, _ = _run_fwd(((wx, wh, b),), x, (reverse,), stash=True,
-                       block_b=block_b, vmem_budget=vmem_budget,
-                       interpret=interpret, lengths=lengths,
-                       stash_dtype=stash_dtype)
-    yp, acts, cseq = outs
-    return yp[:x.shape[0]], (wx, wh, b, x, lengths, yp, acts, cseq)
+    reverse, interpret, block_b, vmem_budget, stash_dtype, seq_chunk = \
+        static
+    ys, res = _run_fwd_train(((wx, wh, b),), x, (reverse,), lengths,
+                             interpret=interpret, block_b=block_b,
+                             vmem_budget=vmem_budget,
+                             stash_dtype=stash_dtype,
+                             seq_chunk=seq_chunk)
+    return ys[0], (wx, wh, b, lengths, res)
 
 
-def _lstm_vjp_bwd(static, res, dy):
-    reverse, interpret, block_b, vmem_budget, stash_dtype = static
-    wx, wh, b, x, lengths, yp, acts, cseq = res
-    B = x.shape[0]
-    bb, Bp = _tile(x, 1, wh.shape[0], block_b, vmem_budget, training=True,
-                   stash_itemsize=_stash_dtype(stash_dtype).itemsize)
-    assert Bp == yp.shape[0], (Bp, yp.shape)
-    lp = (None if lengths is None
-          else _pad_rows(lengths.astype(jnp.int32), Bp))
-    dxp, dwx, dwh, db = _run_bwd(
-        wx, wh, _pad_rows(x, Bp), yp, acts, cseq, _pad_rows(dy, Bp),
-        reverse=reverse, bb=bb, interpret=interpret, lengths_p=lp)
+def _lstm_vjp_bwd(static, fullres, dy):
+    reverse, interpret, block_b, vmem_budget, stash_dtype, seq_chunk = \
+        static
+    wx, wh, b, lengths, res = fullres
+    grads, dx = _run_bwd_train(((wx, wh, b),), res, (dy,), (reverse,),
+                               interpret=interpret, block_b=block_b,
+                               vmem_budget=vmem_budget,
+                               stash_dtype=stash_dtype,
+                               seq_chunk=seq_chunk)
+    (dwx, dwh, db), = grads
     return (dwx.astype(wx.dtype), dwh.astype(wh.dtype),
-            db.astype(b.dtype), dxp[:B].astype(x.dtype),
+            db.astype(b.dtype), dx.astype(res[0].dtype),
             _len_cotangent(lengths))
 
 
@@ -562,16 +990,19 @@ _lstm_vjp.defvjp(_lstm_vjp_fwd, _lstm_vjp_bwd)
 
 def lstm_sequence(wx, wh, b, x, lengths=None, *, reverse: bool = False,
                   interpret: bool = None, block_b: int = None,
-                  vmem_budget: int = None, stash_dtype: str = None):
+                  vmem_budget: int = None, stash_dtype: str = None,
+                  seq_chunk: int = 0):
     """x: (B, T, D) -> (B, T, H); weights wx (D,4H), wh (H,4H), b (4H,).
 
     Differentiable (custom VJP; see module docstring).  ``block_b``
     tiles the batch (None -> :func:`auto_block_b`).  ``lengths`` (B,)
     int selects the masked recurrence (frozen carry + zeroed output on
     padded steps); ``stash_dtype`` ('float32' | 'bfloat16') sets the
-    training-forward residual stash precision."""
+    training-forward residual stash precision; ``seq_chunk`` (K > 0
+    frames, or -1 for auto) switches training to the sequence-chunked
+    recompute backward (O(T/K) residual stash)."""
     return _lstm_vjp((bool(reverse), interpret, block_b, vmem_budget,
-                      stash_dtype), wx, wh, b, x, lengths)
+                      stash_dtype, seq_chunk or 0), wx, wh, b, x, lengths)
 
 
 # ---------------------------------------------------------------------------
@@ -583,7 +1014,7 @@ _BLSTM_REVS = (False, True)
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _blstm_vjp(static, wxf, whf, bf, wxb, whb, bb_, x, lengths):
-    interpret, block_b, vmem_budget, stash_dtype = static
+    interpret, block_b, vmem_budget = static[:3]
     outs, _ = _run_fwd(((wxf, whf, bf), (wxb, whb, bb_)), x, _BLSTM_REVS,
                        stash=False, block_b=block_b,
                        vmem_budget=vmem_budget, interpret=interpret,
@@ -593,43 +1024,30 @@ def _blstm_vjp(static, wxf, whf, bf, wxb, whb, bb_, x, lengths):
 
 
 def _blstm_vjp_fwd(static, wxf, whf, bf, wxb, whb, bb_, x, lengths):
-    interpret, block_b, vmem_budget, stash_dtype = static
-    outs, _ = _run_fwd(((wxf, whf, bf), (wxb, whb, bb_)), x, _BLSTM_REVS,
-                       stash=True, block_b=block_b,
-                       vmem_budget=vmem_budget, interpret=interpret,
-                       lengths=lengths, stash_dtype=stash_dtype)
-    yf, yb, acts_f, cseq_f, acts_b, cseq_b = outs
-    B = x.shape[0]
-    y = jnp.concatenate([yf[:B], yb[:B]], axis=-1)
-    return y, (wxf, whf, bf, wxb, whb, bb_, x, lengths,
-               yf, acts_f, cseq_f, yb, acts_b, cseq_b)
+    interpret, block_b, vmem_budget, stash_dtype, seq_chunk = static
+    ys, res = _run_fwd_train(((wxf, whf, bf), (wxb, whb, bb_)), x,
+                             _BLSTM_REVS, lengths, interpret=interpret,
+                             block_b=block_b, vmem_budget=vmem_budget,
+                             stash_dtype=stash_dtype,
+                             seq_chunk=seq_chunk)
+    y = jnp.concatenate(ys, axis=-1)
+    return y, (wxf, whf, bf, wxb, whb, bb_, lengths, res)
 
 
-def _blstm_vjp_bwd(static, res, dy):
-    interpret, block_b, vmem_budget, stash_dtype = static
-    (wxf, whf, bf, wxb, whb, bb_, x, lengths,
-     yf, acts_f, cseq_f, yb, acts_b, cseq_b) = res
-    B = x.shape[0]
+def _blstm_vjp_bwd(static, fullres, dy):
+    interpret, block_b, vmem_budget, stash_dtype, seq_chunk = static
+    wxf, whf, bf, wxb, whb, bb_, lengths, res = fullres
     H = whf.shape[0]
-    bb, Bp = _tile(x, 2, H, block_b, vmem_budget, training=True,
-                   stash_itemsize=_stash_dtype(stash_dtype).itemsize)
-    assert Bp == yf.shape[0], (Bp, yf.shape)
-    xp = _pad_rows(x, Bp)
-    lp = (None if lengths is None
-          else _pad_rows(lengths.astype(jnp.int32), Bp))
-    dyf = _pad_rows(dy[..., :H], Bp)
-    dyb = _pad_rows(dy[..., H:], Bp)
-    dxf, dwxf, dwhf, dbf = _run_bwd(wxf, whf, xp, yf, acts_f, cseq_f, dyf,
-                                    reverse=False, bb=bb,
-                                    interpret=interpret, lengths_p=lp)
-    dxb, dwxb, dwhb, dbb = _run_bwd(wxb, whb, xp, yb, acts_b, cseq_b, dyb,
-                                    reverse=True, bb=bb,
-                                    interpret=interpret, lengths_p=lp)
-    dx = (dxf.astype(jnp.float32) + dxb.astype(jnp.float32))[:B]
+    grads, dx = _run_bwd_train(
+        ((wxf, whf, bf), (wxb, whb, bb_)), res,
+        (dy[..., :H], dy[..., H:]), _BLSTM_REVS, interpret=interpret,
+        block_b=block_b, vmem_budget=vmem_budget,
+        stash_dtype=stash_dtype, seq_chunk=seq_chunk)
+    (dwxf, dwhf, dbf), (dwxb, dwhb, dbb) = grads
     return (dwxf.astype(wxf.dtype), dwhf.astype(whf.dtype),
             dbf.astype(bf.dtype), dwxb.astype(wxb.dtype),
             dwhb.astype(whb.dtype), dbb.astype(bb_.dtype),
-            dx.astype(x.dtype), _len_cotangent(lengths))
+            dx.astype(res[0].dtype), _len_cotangent(lengths))
 
 
 _blstm_vjp.defvjp(_blstm_vjp_fwd, _blstm_vjp_bwd)
@@ -638,7 +1056,7 @@ _blstm_vjp.defvjp(_blstm_vjp_fwd, _blstm_vjp_bwd)
 def blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
                    lengths=None, *, interpret: bool = None,
                    block_b: int = None, vmem_budget: int = None,
-                   stash_dtype: str = None):
+                   stash_dtype: str = None, seq_chunk: int = 0):
     """Fused bidirectional layer: x (B, T, D) -> (B, T, 2H) with the
     forward-direction output in [..., :H] and the time-reversed
     direction in [..., H:] — one kernel invocation, both weight sets
@@ -646,7 +1064,262 @@ def blstm_sequence(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
 
     ``lengths`` (B,) int masks padded steps (the reverse direction then
     reverses within each row's valid span); ``stash_dtype`` sets the
-    training-forward residual stash precision."""
-    return _blstm_vjp((interpret, block_b, vmem_budget, stash_dtype),
+    training-forward residual stash precision; ``seq_chunk`` (K > 0
+    frames, or -1 for auto) selects the sequence-chunked recompute
+    backward (O(T/K) residual stash)."""
+    return _blstm_vjp((interpret, block_b, vmem_budget, stash_dtype,
+                       seq_chunk or 0),
                       wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
                       lengths)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-layer stack (inter-layer h stays VMEM-resident)
+# ---------------------------------------------------------------------------
+
+def _stack_usage(bb: int, T: int, D: int, H: int, itemsize: int) -> int:
+    """VMEM resident set of the fused-stack kernel at batch tile bb (the
+    two (bB, T, 2H) inter-layer ping-pong buffers dominate; see
+    docs/kernels.md for the walk-through)."""
+    Dm = max(D, 2 * H)
+    return (2 * (Dm * 4 * H + H * 4 * H + 4 * H) * itemsize  # one layer
+            + 2 * bb * T * 2 * H * itemsize        # ping-pong buffers
+            + 2 * bb * (D + 2 * H) * itemsize      # x/y blocks
+            + 4 * bb * H * 4)                      # (h, c) x 2 dirs
+
+
+def auto_stack_block_b(B: int, T: int, D: int, H: int, itemsize: int,
+                       vmem_budget: int = None) -> int:
+    """Batch tile for the fused-stack kernel: the ping-pong buffers scale
+    with T, so the tile shrinks as sequences grow (floor 8 rows; if even
+    the floor overruns the budget, `blstm_stack_sequence` falls back to
+    the per-layer loop instead of overcommitting VMEM)."""
+    return _fit_block_b(
+        B, lambda bb: _stack_usage(bb, T, D, H, itemsize),
+        vmem_budget or DEFAULT_VMEM_BUDGET)
+
+
+def _make_stack_kernel(L: int, T: int, D0: int, Dm: int, H: int,
+                       masked: bool):
+    """Whole-stack body on the (B//bB, L, T) grid (L and T sequential,
+    T innermost).  Per-direction math is op-for-op `_make_fwd_kernel`
+    (shared via `_cell_math`); the only new moving part is the layer
+    input: layer 0 reads the x block (D0 wide, zero-extended to Dm
+    in-register — exact, and avoids materializing a Dm-wide x copy in
+    HBM), layer l>0 reads layer l-1's output from the VMEM ping-pong
+    buffer at its direction's real time index (the x index maps collapse
+    to a constant block for l > 0, so x stays resident instead of being
+    re-fetched every step).  Outputs are written only by the last
+    layer."""
+
+    def kernel(*refs):
+        (xf_ref, xb_ref, wxs_ref, whs_ref, bs_ref) = refs[:5]
+        len_ref = refs[5] if masked else None
+        yf_ref, yb_ref = refs[5 + (1 if masked else 0):][:2]
+        (ybuf0, ybuf1, h0_ref, c0_ref, h1_ref, c1_ref) = refs[-6:]
+        l = pl.program_id(1)
+        t = pl.program_id(2)
+        even = l % 2 == 0
+        if masked:
+            lens = len_ref[...]
+
+        for d in range(2):
+            x_ref = (xf_ref, xb_ref)[d]
+            h_ref, c_ref = ((h0_ref, c0_ref), (h1_ref, c1_ref))[d]
+            out_ref = (yf_ref, yb_ref)[d]
+            tr = t if d == 0 else T - 1 - t       # real time this step
+
+            @pl.when(t == 0)
+            def _init(h_ref=h_ref, c_ref=c_ref):
+                h_ref[...] = jnp.zeros_like(h_ref)
+                c_ref[...] = jnp.zeros_like(c_ref)
+
+            # layer input: x block for l == 0, else the previous layer's
+            # buffer (ping-pong: even layers write ybuf0, odd ybuf1)
+            x_in = x_ref[...]
+            if Dm > D0:
+                x_in = jnp.pad(x_in, ((0, 0), (0, Dm - D0)))
+            p0 = ybuf0[:, pl.ds(tr, 1), :][:, 0, :]
+            p1 = ybuf1[:, pl.ds(tr, 1), :][:, 0, :]
+            prev = jnp.where(even, p1, p0)
+            if Dm > 2 * H:
+                prev = jnp.pad(prev, ((0, 0), (0, Dm - 2 * H)))
+            inp = jnp.where(l == 0, x_in, prev.astype(x_in.dtype))
+
+            h = h_ref[...]
+            c_prev = c_ref[...]
+            i, f, g, o, c, h_new = _cell_math(
+                inp, h.astype(inp.dtype), c_prev, wxs_ref[d],
+                whs_ref[d], bs_ref[d])
+            if masked:
+                vm = (tr < lens)[:, None]
+                c = jnp.where(vm, c, c_prev)
+                y = jnp.where(vm, h_new, jnp.zeros_like(h_new))
+                h_new = jnp.where(vm, h_new, h)
+            else:
+                y = h_new
+            c_ref[...] = c
+            h_ref[...] = h_new
+            yb_val = y.astype(ybuf0.dtype)[:, None, :]
+
+            @pl.when(even)
+            def _w0(yb_val=yb_val, tr=tr, d=d):
+                ybuf0[:, pl.ds(tr, 1), d * H:(d + 1) * H] = yb_val
+
+            @pl.when(jnp.logical_not(even))
+            def _w1(yb_val=yb_val, tr=tr, d=d):
+                ybuf1[:, pl.ds(tr, 1), d * H:(d + 1) * H] = yb_val
+
+            @pl.when(l == L - 1)
+            def _out(out_ref=out_ref, y=y):
+                out_ref[...] = y.astype(out_ref.dtype)
+
+    return kernel
+
+
+def _stack_layers(params):
+    """Normalize the per-layer parameter pytree to a tuple of 6-tuples
+    ((wxf, whf, bf, wxb, whb, bb), ...)."""
+    return tuple(tuple(layer) for layer in params)
+
+
+def _stack_primal(params, x, lengths, *, interpret, block_b, vmem_budget):
+    layers = _stack_layers(params)
+    L = len(layers)
+    B, T, D0 = x.shape
+    H = layers[0][1].shape[0]
+    Dm = max(D0, 2 * H)
+    itemsize = jnp.dtype(x.dtype).itemsize
+    bb = block_b or auto_stack_block_b(B, T, D0, H, itemsize, vmem_budget)
+    if (block_b is None and _stack_usage(bb, T, D0, H, itemsize)
+            > (vmem_budget or DEFAULT_VMEM_BUDGET)):
+        # very long T: even the 8-row floor cannot hold the (bB, T, 2H)
+        # ping-pong buffers — run the per-layer fused-BLSTM loop
+        # (T-independent VMEM) instead of overcommitting/failing compile
+        for (wxf, whf, bf, wxb, whb, bb_) in layers:
+            outs, _ = _run_fwd(((wxf, whf, bf), (wxb, whb, bb_)), x,
+                               _BLSTM_REVS, stash=False, block_b=None,
+                               vmem_budget=vmem_budget,
+                               interpret=interpret, lengths=lengths)
+            x = jnp.concatenate([outs[0][:B], outs[1][:B]], axis=-1)
+        return x
+    Bp = _round_up(B, bb)
+
+    def padw(w):
+        return jnp.pad(w, ((0, Dm - w.shape[0]), (0, 0)))
+
+    wxs = jnp.stack([jnp.stack([padw(lw[0]), padw(lw[3])])
+                     for lw in layers])                  # (L, 2, Dm, 4H)
+    whs = jnp.stack([jnp.stack([lw[1], lw[4]]) for lw in layers])
+    bs = jnp.stack([jnp.stack([lw[2], lw[5]]) for lw in layers])
+    xp = _pad_rows(x, Bp)
+    masked = lengths is not None
+
+    # x is only consumed by layer 0; for l > 0 the maps collapse to a
+    # constant block so it stays resident instead of re-streaming
+    def xmap_f(ib, l, t):
+        return (ib, jnp.where(l == 0, t, 0), 0)
+
+    def xmap_b(ib, l, t):
+        return (ib, jnp.where(l == 0, T - 1 - t, 0), 0)
+
+    in_specs = [
+        pl.BlockSpec((bb, None, D0), xmap_f),
+        pl.BlockSpec((bb, None, D0), xmap_b),
+        pl.BlockSpec((None, 2, Dm, 4 * H), lambda ib, l, t: (l, 0, 0, 0)),
+        pl.BlockSpec((None, 2, H, 4 * H), lambda ib, l, t: (l, 0, 0, 0)),
+        pl.BlockSpec((None, 2, 4 * H), lambda ib, l, t: (l, 0, 0)),
+    ]
+    operands = [xp, xp, wxs, whs, bs]
+    if masked:
+        in_specs.append(pl.BlockSpec((bb,), lambda ib, l, t: (ib,)))
+        operands.append(_pad_rows(lengths.astype(jnp.int32), Bp))
+
+    yf, yb = pl.pallas_call(
+        _make_stack_kernel(L, T, D0, Dm, H, masked),
+        grid=(Bp // bb, L, T),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bb, None, H), lambda ib, l, t: (ib, t, 0)),
+            pl.BlockSpec((bb, None, H),
+                         lambda ib, l, t: (ib, T - 1 - t, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((Bp, T, H), x.dtype)] * 2,
+        scratch_shapes=[
+            pltpu.VMEM((bb, T, 2 * H), x.dtype),    # ping-pong buffer 0
+            pltpu.VMEM((bb, T, 2 * H), x.dtype),    # ping-pong buffer 1
+            pltpu.VMEM((bb, H), jnp.float32),       # fwd-dir h
+            pltpu.VMEM((bb, H), jnp.float32),       # fwd-dir c
+            pltpu.VMEM((bb, H), jnp.float32),       # rev-dir h
+            pltpu.VMEM((bb, H), jnp.float32),       # rev-dir c
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(*operands)
+    return jnp.concatenate([yf[:B], yb[:B]], axis=-1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _stack_vjp(static, params, x, lengths):
+    interpret, block_b, vmem_budget = static[:3]
+    return _stack_primal(params, x, lengths, interpret=interpret,
+                         block_b=block_b, vmem_budget=vmem_budget)
+
+
+def _stack_vjp_fwd(static, params, x, lengths):
+    interpret, block_b, vmem_budget, stash_dtype, seq_chunk = static
+    layers = _stack_layers(params)
+    xl, reses = x, []
+    for (wxf, whf, bf, wxb, whb, bb_) in layers:
+        ys, res = _run_fwd_train(((wxf, whf, bf), (wxb, whb, bb_)), xl,
+                                 _BLSTM_REVS, lengths,
+                                 interpret=interpret, block_b=block_b,
+                                 vmem_budget=vmem_budget,
+                                 stash_dtype=stash_dtype,
+                                 seq_chunk=seq_chunk)
+        reses.append(res)
+        xl = jnp.concatenate(ys, axis=-1)
+    return xl, (params, lengths, tuple(reses))
+
+
+def _stack_vjp_bwd(static, fullres, dy):
+    interpret, block_b, vmem_budget, stash_dtype, seq_chunk = static
+    params, lengths, reses = fullres
+    layers = _stack_layers(params)
+    H = layers[0][1].shape[0]
+    dparams = [None] * len(layers)
+    for li in reversed(range(len(layers))):
+        (wxf, whf, bf, wxb, whb, bb_) = layers[li]
+        grads, dx = _run_bwd_train(
+            ((wxf, whf, bf), (wxb, whb, bb_)), reses[li],
+            (dy[..., :H], dy[..., H:]), _BLSTM_REVS,
+            interpret=interpret, block_b=block_b,
+            vmem_budget=vmem_budget, stash_dtype=stash_dtype,
+            seq_chunk=seq_chunk)
+        (dwxf, dwhf, dbf), (dwxb, dwhb, dbb) = grads
+        dparams[li] = (dwxf.astype(wxf.dtype), dwhf.astype(whf.dtype),
+                       dbf.astype(bf.dtype), dwxb.astype(wxb.dtype),
+                       dwhb.astype(whb.dtype), dbb.astype(bb_.dtype))
+        dy = dx.astype(reses[li][0].dtype)   # next layer down's cotangent
+    return tuple(dparams), dy, _len_cotangent(lengths)
+
+
+_stack_vjp.defvjp(_stack_vjp_fwd, _stack_vjp_bwd)
+
+
+def blstm_stack_sequence(params, x, lengths=None, *,
+                         interpret: bool = None, block_b: int = None,
+                         vmem_budget: int = None, stash_dtype: str = None,
+                         seq_chunk: int = 0):
+    """The whole stacked BLSTM as one fused kernel: ``params`` is a
+    sequence of per-layer ``(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd,
+    b_bwd)`` tuples (layer 0 consumes x's D features, deeper layers the
+    previous layer's 2H); returns (B, T, 2H_last).
+
+    The primal (inference) call keeps the inter-layer activations in
+    VMEM — bit-identical to the per-layer :func:`blstm_sequence` loop —
+    while under ``jax.vjp`` the custom rules run the per-layer stashing
+    forwards/backwards (every layer's output is a residual the backward
+    needs anyway), composing with ``lengths``, ``stash_dtype`` and
+    ``seq_chunk`` exactly like the single-layer entry points."""
+    return _stack_vjp((interpret, block_b, vmem_budget, stash_dtype,
+                       seq_chunk or 0), _stack_layers(params), x, lengths)

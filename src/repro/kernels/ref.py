@@ -83,6 +83,15 @@ def blstm_ref(wx_fwd, wh_fwd, b_fwd, wx_bwd, wh_bwd, b_bwd, x,
                   lengths=lengths)], axis=-1)
 
 
+def blstm_stack_ref(layers, x, lengths=None):
+    """Oracle for kernels.lstm_cell.blstm_stack_sequence: the per-layer
+    loop of :func:`blstm_ref` (each layer consumes the previous layer's
+    (B, T, 2H) output)."""
+    for (wxf, whf, bf, wxb, whb, bb) in layers:
+        x = blstm_ref(wxf, whf, bf, wxb, whb, bb, x, lengths=lengths)
+    return x
+
+
 def ssd_ref(x, dt, A, Bm, Cm):
     """Exact token-by-token SSM recurrence.
 

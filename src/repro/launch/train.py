@@ -107,6 +107,13 @@ def main(argv=None):
                     choices=["", "float32", "bfloat16"],
                     help="Pallas LSTM residual-stash dtype (bfloat16 "
                          "halves the gate/cell stash HBM)")
+    ap.add_argument("--seq-chunk", type=int, default=0,
+                    help="Pallas LSTM sequence-chunked recompute: stash "
+                         "only (h, c) carries every K frames and rebuild "
+                         "gate residuals in VMEM in the backward (0 = "
+                         "off, -1 = auto from the VMEM budget); cuts the "
+                         "O(T) residual stash to O(T/K) for long "
+                         "utterances")
     ap.add_argument("--var-len", action="store_true",
                     help="variable-length utterances: batches carry a "
                          "'lengths' key, loss/BLSTM/aggregation mask "
@@ -122,7 +129,8 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if args.block_b or args.vmem_budget_mb or args.stash_dtype:
+    if (args.block_b or args.vmem_budget_mb or args.stash_dtype
+            or args.seq_chunk):
         import dataclasses
         changes = {}
         if args.block_b:
@@ -131,6 +139,8 @@ def main(argv=None):
             changes["lstm_vmem_budget_mb"] = args.vmem_budget_mb
         if args.stash_dtype:
             changes["lstm_stash_dtype"] = args.stash_dtype
+        if args.seq_chunk:
+            changes["lstm_seq_chunk"] = args.seq_chunk
         cfg = dataclasses.replace(cfg, **changes)
     seq_len = args.seq_len or (21 if cfg.family == "lstm" else 128)
     n_learners = args.learners if args.learners is not None else cfg.n_learners

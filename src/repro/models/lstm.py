@@ -43,16 +43,21 @@ def lstm_cell_step(wx, wh, b, x_t, h, c):
 
 
 def _kernel_knobs(cfg):
-    """(block_b, vmem_budget, stash_dtype) for the Pallas LSTM kernels."""
+    """(block_b, vmem_budget, stash_dtype, seq_chunk) for the Pallas LSTM
+    kernels (seq_chunk: 0 = per-step stash, -1 = auto-tuned chunk length,
+    K > 0 = K-frame chunked recompute; docs/kernels.md)."""
     block_b = getattr(cfg, "lstm_block_b", 0) or None
     budget_mb = getattr(cfg, "lstm_vmem_budget_mb", 0)
     stash = getattr(cfg, "lstm_stash_dtype", "float32") or "float32"
-    return block_b, (budget_mb * 2 ** 20 if budget_mb else None), stash
+    seq_chunk = getattr(cfg, "lstm_seq_chunk", 0) or 0
+    return (block_b, (budget_mb * 2 ** 20 if budget_mb else None), stash,
+            seq_chunk)
 
 
 def lstm_layer(p, x, *, lengths=None, reverse: bool = False,
                kernel_impl: str = "jax", block_b: int = None,
-               vmem_budget: int = None, stash_dtype: str = None):
+               vmem_budget: int = None, stash_dtype: str = None,
+               seq_chunk: int = 0):
     """x: (B,T,D_in) -> (B,T,H).
 
     ``lengths`` (B,) int enables the masked recurrence (carry frozen and
@@ -67,7 +72,8 @@ def lstm_layer(p, x, *, lengths=None, reverse: bool = False,
         return lstm_sequence(p["wx"], p["wh"], p["b"], x, lengths,
                              reverse=reverse, block_b=block_b,
                              vmem_budget=vmem_budget,
-                             stash_dtype=stash_dtype)
+                             stash_dtype=stash_dtype,
+                             seq_chunk=seq_chunk)
 
     if lengths is None:
         def step(carry, x_t):
@@ -135,29 +141,35 @@ def forward(cfg, params, features, lengths=None, *,
             kernel_impl: str = "jax"):
     """features: (B, T, input_dim) -> logits (B, T, vocab).
 
-    The pallas path runs each bi-LSTM layer as ONE fused kernel
-    invocation (both directions' weights resident in VMEM, x handed to
-    the kernel once) instead of two sequential direction passes.
+    The pallas path runs the WHOLE bi-LSTM stack as one fused kernel
+    invocation (``repro.kernels.ops.blstm_stack``): inter-layer
+    activations stay VMEM-resident on the inference call, and under
+    ``jax.value_and_grad`` its custom VJP falls back to the per-layer
+    stashing forward/backward (honoring the ``lstm_stash_dtype`` /
+    ``lstm_seq_chunk`` config knobs).
 
     ``lengths`` (B,) int threads the masked recurrence through every
     layer (frozen carries + zeroed padded outputs; module docstring)."""
     x = features.astype(jnp.bfloat16)
-    block_b, vmem_budget, stash_dtype = _kernel_knobs(cfg)
-    for i in range(cfg.n_layers):
-        p = params["layers"][f"layer_{i}"]
-        if kernel_impl == "pallas":
-            from repro.kernels.ops import blstm_sequence
-            x = blstm_sequence(p["fwd"]["wx"], p["fwd"]["wh"], p["fwd"]["b"],
-                               p["bwd"]["wx"], p["bwd"]["wh"], p["bwd"]["b"],
-                               x, lengths, block_b=block_b,
-                               vmem_budget=vmem_budget,
-                               stash_dtype=stash_dtype)
-            continue
-        fwd = lstm_layer(p["fwd"], x, lengths=lengths,
-                         kernel_impl=kernel_impl)
-        bwd = lstm_layer(p["bwd"], x, lengths=lengths, reverse=True,
-                         kernel_impl=kernel_impl)
-        x = jnp.concatenate([fwd, bwd], axis=-1)
+    block_b, vmem_budget, stash_dtype, seq_chunk = _kernel_knobs(cfg)
+    if kernel_impl == "pallas":
+        from repro.kernels.ops import blstm_stack
+        layers = tuple(
+            (p["fwd"]["wx"], p["fwd"]["wh"], p["fwd"]["b"],
+             p["bwd"]["wx"], p["bwd"]["wh"], p["bwd"]["b"])
+            for p in (params["layers"][f"layer_{i}"]
+                      for i in range(cfg.n_layers)))
+        x = blstm_stack(layers, x, lengths, block_b=block_b,
+                        vmem_budget=vmem_budget, stash_dtype=stash_dtype,
+                        seq_chunk=seq_chunk)
+    else:
+        for i in range(cfg.n_layers):
+            p = params["layers"][f"layer_{i}"]
+            fwd = lstm_layer(p["fwd"], x, lengths=lengths,
+                             kernel_impl=kernel_impl)
+            bwd = lstm_layer(p["bwd"], x, lengths=lengths, reverse=True,
+                             kernel_impl=kernel_impl)
+            x = jnp.concatenate([fwd, bwd], axis=-1)
     x = jnp.einsum("btd,dk->btk", x, params["bottleneck"])
     logits = (jnp.einsum("btk,kv->btv", x, params["softmax_w"])
               .astype(jnp.float32) + params["softmax_b"])

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Docs consistency checker (the CI `docs` job; also run as a tier-1
+test via tests/test_docs.py).
+
+Two checks, both against the working tree:
+
+1. **Intra-repo markdown links** — every relative `[text](target)` link
+   in a tracked *.md file must resolve to an existing file/directory
+   (anchors are stripped; external schemes are ignored).
+2. **README flag reference** — every argparse flag defined in
+   `src/repro/launch/train.py` and `src/repro/launch/serve.py` must
+   appear in README.md, so the CLI surface and its documentation cannot
+   drift apart.
+
+Exit status is non-zero with one line per problem.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — good enough for our hand-written markdown; skips
+# fenced code because our docs never put link syntax inside it.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FLAG = re.compile(r"add_argument\(\s*\"(--[A-Za-z0-9-]+)\"")
+
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+FLAG_SOURCES = ("src/repro/launch/train.py", "src/repro/launch/serve.py")
+
+
+def iter_markdown(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if ".git" in path.parts or ".pytest_cache" in path.parts:
+            continue
+        yield path
+
+
+def check_links(root: Path = ROOT) -> list:
+    """Broken intra-repo links as 'file: target' strings."""
+    problems = []
+    for md in iter_markdown(root):
+        for target in _LINK.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (md.parent / rel).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{md.relative_to(root)}: broken link -> {target}")
+    return problems
+
+
+def declared_flags(root: Path = ROOT) -> dict:
+    """{flag: defining file} over the launcher argparse surfaces."""
+    flags = {}
+    for src in FLAG_SOURCES:
+        text = (root / src).read_text(encoding="utf-8")
+        for flag in _FLAG.findall(text):
+            flags.setdefault(flag, src)
+    return flags
+
+
+def check_flag_reference(root: Path = ROOT) -> list:
+    """Launcher flags missing from the README flag reference."""
+    readme = (root / "README.md").read_text(encoding="utf-8")
+    return [f"README.md: flag {flag} ({src}) missing from the "
+            f"flag reference"
+            for flag, src in sorted(declared_flags(root).items())
+            if f"`{flag}`" not in readme]
+
+
+def main() -> int:
+    problems = check_links() + check_flag_reference()
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"{len(problems)} docs problem(s)", file=sys.stderr)
+        return 1
+    n_md = len(list(iter_markdown(ROOT)))
+    print(f"docs OK: {n_md} markdown files, "
+          f"{len(declared_flags())} CLI flags documented")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
