@@ -175,21 +175,25 @@ def bench_fig5_load_balance():
 # ---------------------------------------------------------------------------
 
 def bench_compression():
-    """AD-PSGD speedup with fp32 vs bf16 vs int8 neighbor payloads — in the
-    paper's own high-communication/low-compute regime the wire format is
-    decisive (measured dry-run note: at phi3-scale on 256 chips mixing is
-    <2%% of collective bytes, so this matters for the ASR regime, not
-    there — EXPERIMENTS.md §Perf)."""
+    """AD-PSGD speedup with fp32 vs bf16 vs int8 vs topk neighbor payloads
+    — in the paper's own high-communication/low-compute regime the wire
+    format is decisive (measured dry-run note: at phi3-scale on 256 chips
+    mixing is <2%% of collective bytes, so this matters for the ASR
+    regime, not there — EXPERIMENTS.md §Perf).  Wire scaling comes from
+    perfsim.wire_payload_bytes (the Transport codec accounting); the
+    exact per-(strategy × wire) byte matrix is the `comm` bench."""
     from benchmarks.perfsim import ClusterSpec, calibrate_blstm, \
-        simulate_async
+        simulate_async, wire_payload_bytes
 
     t_comp, model_bytes, _ = calibrate_blstm(160)
     L, n_batches = 16, 4096
     t_single = t_comp * n_batches
     rows = []
-    for name, factor in (("fp32", 1.0), ("bf16", 0.5), ("int8_q8", 0.25)):
-        spec = ClusterSpec(L, np.full(L, t_comp), model_bytes * factor)
+    for name, wire in (("fp32", "f32"), ("bf16", "bf16"),
+                       ("int8_q8", "int8"), ("topk1pct", "topk")):
+        payload = wire_payload_bytes(model_bytes, wire)
+        spec = ClusterSpec(L, np.full(L, t_comp), payload)
         t, _ = simulate_async(spec, n_batches)
         rows.append((f"compression/ad_psgd_speedup/{name}", t_single / t,
-                     f"L={L}, payload x{factor}"))
+                     f"L={L}, payload x{payload / model_bytes:.3g}"))
     return rows

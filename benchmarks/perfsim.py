@@ -24,6 +24,20 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+# Analytic payload scale of each wire codec relative to the f32 wire —
+# the perfsim counterpart of repro.core.transport.Transport._payload_bytes
+# (int8 carries an f32 scale per tensor, topk ships 8B value+index pairs).
+WIRE_FACTORS = {"f32": 1.0, "bf16": 0.5, "int8": 0.2505}
+
+
+def wire_payload_bytes(model_bytes: float, wire: str,
+                       topk_frac: float = 0.01) -> float:
+    """Bytes on the wire for one model-sized payload under a codec."""
+    if wire == "topk":
+        return model_bytes * 2.0 * topk_frac   # 8B/kept of 4B/elem
+    return model_bytes * WIRE_FACTORS[wire]
+
+
 @dataclass
 class ClusterSpec:
     n_learners: int

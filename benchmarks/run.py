@@ -24,10 +24,84 @@ def all_benches():
         ("table3_hring", T.bench_table3_hring),
         ("fig5_load_balance", T.bench_fig5_load_balance),
         ("compression", T.bench_compression),
+        ("comm_matrix", _comm_matrix),
         ("kernel_microbench", _kernel_microbench),
         ("varlen_bucketing", _varlen_bucketing),
         ("longseq", _longseq),
     ]
+
+
+def _comm_matrix():
+    """Communication/computation tradeoff per (strategy × wire) cell —
+    the substrate counterpart of the paper's §IV-D/§V tables.  For each
+    strategy's default topology and each wire codec: exact wire MB sent
+    per learner per mixing round on the paper's BLSTM param tree
+    (Transport.wire_bytes, L=16; hring as 4 pods of 4 with BOTH stages
+    coded by the cell's wire), the ratio vs the f32 wire, and the
+    perfsim AD-PSGD-style speedup with that payload (calibrated
+    compute; bmuf amortizes its sync over the 16-step block)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.perfsim import (ClusterSpec, calibrate_blstm,
+                                    simulate_async, simulate_sync,
+                                    wire_payload_bytes)
+    from repro.configs import get_arch
+    from repro.core import strategies as ST
+    from repro.core.transport import Transport
+    from repro.models import build_model
+
+    L = 16
+    specs = build_model(get_arch("swb2000-blstm")).param_specs()
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((L,) + tuple(s.shape), jnp.float32),
+        specs)
+
+    t_comp, model_bytes, _ = calibrate_blstm(160)
+    n_batches = 4096
+    t_single = t_comp * n_batches
+
+    rows = []
+    f32_ref = {}
+    for strat_name in ("sc_psgd_replicated", "ad_psgd", "bmuf", "hring"):
+        strat = ST.get_strategy(strat_name)
+        for wire in ("f32", "bf16", "int8", "topk"):
+            kw = dict(topology=strat.topology, wire=wire, topk_frac=0.01)
+            if strat.topology == "hierarchical":
+                # code both stages with the cell's wire (mixed intra/inter
+                # wires are a config choice, e.g. bf16 intra + topk inter)
+                kw.update(pod_size=4, intra_wire=wire)
+            tr = Transport(**kw)
+            per_round = tr.wire_bytes(stacked)
+            per_step = (per_round / strat.block_size if strat.block_size
+                        else per_round)
+            rows.append((f"comm/wire_mb_per_step/{strat_name}/{wire}",
+                         per_step / 2 ** 20,
+                         "MB sent per learner per step"
+                         + (f" (sync/{strat.block_size} amortized)"
+                            if strat.block_size else "")))
+            if wire == "f32":
+                f32_ref[strat_name] = per_step
+            else:
+                rows.append((f"comm/wire_ratio_vs_f32/{strat_name}/{wire}",
+                             per_step / f32_ref[strat_name],
+                             "acceptance: int8 <= 0.27"))
+            # perfsim wall-clock with this payload on the wire
+            payload = wire_payload_bytes(model_bytes, wire)
+            spec = ClusterSpec(L, np.full(L, t_comp), payload)
+            if strat_name == "sc_psgd_replicated":
+                t, _ = simulate_sync(spec, n_batches)
+            elif strat_name == "bmuf":
+                # allreduce every block_size-th step only
+                t_sync, _ = simulate_sync(spec, n_batches)
+                t = (t_sync - t_comp * n_batches / L) / strat.block_size \
+                    + t_comp * n_batches / L
+            else:
+                t, _ = simulate_async(spec, n_batches)
+            rows.append((f"comm/sim_speedup/{strat_name}/{wire}",
+                         t_single / t, f"L={L} perfsim"))
+    return rows
 
 
 def _longseq():

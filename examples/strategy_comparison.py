@@ -1,7 +1,12 @@
 """Fig. 4-style strategy comparison on one model: heldout loss + consensus
-trajectories of SC/SD/AD-PSGD + BMUF, same data order and LR.
+trajectories of SC/SD/AD-PSGD + BMUF, same data order and LR — optionally
+over a compressed communication substrate (--wire/--topology/...; the
+strategy × topology × wire matrix is in docs/strategies.md).
 
   PYTHONPATH=src python examples/strategy_comparison.py [--arch smollm-360m]
+  # compressed wire, e.g. int8 mixing payloads under two strategies:
+  PYTHONPATH=src python examples/strategy_comparison.py \
+      --strategies ad_psgd,bmuf --wire int8 --steps 50
 """
 import argparse
 
@@ -10,11 +15,15 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core import strategies as ST
+from repro.core.transport import Transport
 from repro.data import make_dataset
 from repro.models import build_model
 from repro.optim.optimizers import sgd
 from repro.optim.schedules import constant
 from repro.sharding import init_spec_tree
+
+DEFAULT_STRATEGIES = ("sc_psgd_replicated", "sd_psgd", "ad_psgd", "bmuf",
+                      "ad_psgd_q8", "ad_psgd_exp")
 
 
 def main():
@@ -23,6 +32,18 @@ def main():
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--learners", type=int, default=4)
     ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--strategies", default=",".join(DEFAULT_STRATEGIES),
+                    help="comma-separated subset to run")
+    ap.add_argument("--topology", default="",
+                    help="substrate topology override (default: each "
+                         "strategy's own)")
+    ap.add_argument("--wire", default="",
+                    choices=["", "f32", "bf16", "int8", "topk"],
+                    help="wire codec override for mixing payloads")
+    ap.add_argument("--intra-wire", default="",
+                    help="hierarchical: intra-pod codec")
+    ap.add_argument("--pod-size", type=int, default=1)
+    ap.add_argument("--topk-frac", type=float, default=0.01)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
@@ -32,23 +53,30 @@ def main():
     ds = make_dataset(cfg, seq_len=seq, batch=4 * L, seed=0)
     heldout = [ds.batch_at(50_000 + i) for i in range(4)]
 
-    print("strategy,step,heldout_loss,consensus")
-    for name in ("sc_psgd_replicated", "sd_psgd", "ad_psgd", "bmuf",
-                 "ad_psgd_q8", "ad_psgd_exp"):
+    print("strategy,step,heldout_loss,consensus,wire_mb")
+    for name in args.strategies.split(","):
         strat = ST.get_strategy(name)
+        transport = Transport(
+            topology=args.topology or strat.topology,
+            wire=args.wire or strat.wire,
+            intra_wire=args.intra_wire or "f32",
+            pod_size=args.pod_size,
+            topk_frac=args.topk_frac)
         params = ST.stack_for_learners(
             init_spec_tree(model.param_specs(), jax.random.PRNGKey(0)), L)
-        state = ST.init_state(strat, params, sgd())
+        state = ST.init_state(strat, params, sgd(), transport=transport)
         step = jax.jit(ST.make_train_step(strat, model.loss_fn, sgd(),
                                           constant(args.lr), n_learners=L,
-                                          with_consensus=True))
+                                          with_consensus=True,
+                                          transport=transport))
         for k in range(args.steps):
             state, m = step(state, ds.batch_at(k))
             if k % 25 == 0 or k == args.steps - 1:
                 avg = ST.average_learners(state["params"])
                 hl = float(np.mean([float(model.loss_fn(avg, hb))
                                     for hb in heldout]))
-                print(f"{name},{k},{hl:.4f},{float(m['consensus']):.3e}",
+                print(f"{name},{k},{hl:.4f},{float(m['consensus']):.3e},"
+                      f"{float(m['wire_bytes']) / 2 ** 20:.3f}",
                       flush=True)
 
 

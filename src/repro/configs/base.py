@@ -112,6 +112,26 @@ class ArchConfig:
     fsdp: bool = False        # shard params over the data axis (SC-PSGD only)
     expert_axis: str = ""     # mesh axis for expert parallelism ("data" or "")
 
+    # ---- communication substrate (repro/core/transport.py; the full
+    # strategy × topology × wire matrix is in docs/strategies.md) ----
+    # mixing topology override; "" = the strategy's default
+    # (uniform | ring | hierarchical | exp | none)
+    comm_topology: str = ""
+    # wire codec for payloads that cross the wire; "" = strategy default
+    # (f32 | bf16 | int8 | topk)
+    comm_wire: str = ""
+    # hierarchical only: codec of the intra-pod allreduce ("" = f32;
+    # f32 | bf16 | int8 — topk is gossip-only); the inter-pod ring uses
+    # comm_wire — e.g. bf16 intra + topk inter
+    comm_intra_wire: str = ""
+    # chunked collectives: split payloads into buckets of this many MB so
+    # XLA can interleave mixing with backward compute (0 = fused payload)
+    comm_bucket_mb: int = 0
+    # hierarchical topology: learners per pod (must divide n_learners)
+    comm_pod_size: int = 1
+    # topk wire: fraction of entries shipped per bucket
+    comm_topk_frac: float = 0.01
+
     # which shapes this arch supports (see DESIGN.md skip notes)
     skip_shapes: tuple = ()
 

@@ -1,8 +1,11 @@
 """The paper's primary contribution: decentralized/asynchronous data-parallel
-SGD strategies expressed in the mixing-matrix formalism of Eq. 14."""
+SGD strategies expressed in the mixing-matrix formalism of Eq. 14, over a
+composable communication substrate (topology × wire × bucketing)."""
 from repro.core.mixing import (  # noqa: F401
     get_mixer,
+    hierarchical_matrix,
     is_doubly_stochastic,
+    mix_hierarchical,
     mix_matrix,
     mix_ring,
     mix_uniform,
@@ -14,9 +17,16 @@ from repro.core.strategies import (  # noqa: F401
     Strategy,
     average_learners,
     consensus_distance,
+    default_transport,
     get_strategy,
     init_state,
     make_train_step,
     split_learner_batch,
     stack_for_learners,
+    transport_from_cfg,
+)
+from repro.core.transport import (  # noqa: F401
+    TOPOLOGIES,
+    WIRES,
+    Transport,
 )

@@ -1,20 +1,29 @@
-"""Communication compression for decentralized mixing (beyond-paper,
-anchored in the paper's §IV-D survey of 1-bit SGD [Seide'14] / QSGD
-[Alistarh'17] / sparsification [Aji'17]).
+"""DEPRECATED compatibility surface for communication compression.
 
-``quantize_int8`` is a per-tensor symmetric linear quantizer with an f32
-scale; applied to the *neighbor payloads* of ring mixing it halves the
-collective-permute wire bytes vs bf16 (4x vs the f32 baseline wire) at the
-cost of <=1/254 relative rounding error per round.  Because mixing is a
-CONTRACTION toward consensus, the quantization noise stays bounded (it is
-re-averaged every round) — validated in tests/test_compression.py, and the
-end-to-end convergence test shows no measurable loss-curve difference at
-int8 on the toy problem.
+The quantizers that used to live here are now WIRE CODECS of the unified
+communication substrate (``repro.core.transport``): what was the bespoke
+``mix_ring_q8`` mixer is exactly ``Transport(topology='ring',
+wire='int8')``, and the int8/topk codecs now compose with EVERY topology
+(uniform allreduce, hierarchical pods, exponential graph) and every
+strategy (sc/sd/ad_psgd, BMUF block sync, hring) instead of only the
+ring.  See docs/strategies.md for the full strategy × topology × wire
+matrix.
+
+Kept here, still anchored in the paper's §IV-D survey of 1-bit SGD
+[Seide'14] / QSGD [Alistarh'17] / sparsification [Aji'17]:
+
+* ``quantize_int8``/``dequantize_int8`` — the per-tensor symmetric
+  linear quantizer (the transport's int8 codec applies it per sender).
+* ``mix_ring_q8`` — thin shim over the substrate, for existing callers.
+* ``make_exp_mixer`` — re-exported from ``repro.core.mixing`` (it is
+  pure topology, not compression).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.mixing import make_exp_mixer  # noqa: F401  (compat)
 
 
 def quantize_int8(x):
@@ -31,61 +40,15 @@ def dequantize_int8(q, scale):
 
 
 def mix_ring_q8(params):
-    """Ring (T_1) mixing with int8 neighbor payloads.
+    """DEPRECATED: ring (T_1) mixing with int8 neighbor payloads — now a
+    shim over ``Transport(topology='ring', wire='int8')``, which applies
+    per-sender scales (a strictly tighter error bound than the old shared
+    per-tensor scale).  Each learner sends q8(w_l) to both ring neighbors;
+    the local replica stays full precision."""
+    from repro.core.transport import Transport
 
-    Each learner sends q8(w_l) to both ring neighbors; the local replica
-    stays full precision: w' = (w + deq(left) + deq(right)) / 3.
-    The permute moves int8 + one f32 scalar — 2x less wire than bf16.
-    """
-    def one(w):
-        L = w.shape[0]
-        if L == 1:
-            return w
-        q, scale = quantize_int8(w)
-        # scales are per-learner-tensor: roll them alongside the payload
-        def neighbor(shift):
-            qn = jnp.roll(q, shift, axis=0)
-            return dequantize_int8(qn, scale)  # per-tensor scale shared
-
-        wf = w.astype(jnp.float32)
-        if L == 2:
-            mixed = (2 * wf + neighbor(1)) / 3.0
-        else:
-            mixed = (wf + neighbor(1) + neighbor(-1)) / 3.0
-        return mixed.astype(w.dtype)
-
-    return jax.tree.map(one, params)
-
-
-def make_exp_mixer(n_learners: int):
-    """One-peer exponential-graph gossip [Assran'19/Ying'21]: at step k each
-    learner averages with the peer 2^(k mod log2 L) hops away.
-
-    For L = 2^m this reaches EXACT consensus every m rounds (hypercube
-    gossip) — strictly faster mixing than the paper's T_1 ring at the same
-    per-step wire cost (ONE permute instead of two).  Time-varying T_k are
-    each doubly stochastic, so the Eq. 14 analysis still applies.
-    """
-    import numpy as np
-
-    L = n_learners
-    m = max(int(np.log2(L)), 1)
-    assert 2 ** m == L or L == 1, "exponential graph wants power-of-2 learners"
-
-    def mix(params, step):
-        if L == 1:
-            return params
-        k = step % m
-
-        def one(w):
-            wf = w.astype(jnp.float32)
-            branches = [
-                (lambda shift: lambda ww=wf, s=shift:
-                 (ww + jnp.roll(ww, s, axis=0)) / 2.0)(2 ** i)
-                for i in range(m)
-            ]
-            return jax.lax.switch(k, branches).astype(w.dtype)
-
-        return jax.tree.map(one, params)
-
-    return mix
+    leaves = jax.tree.leaves(params)
+    L = leaves[0].shape[0] if leaves else 1
+    mixed, _ = Transport(topology="ring", wire="int8").make_mixer(L)(
+        params, jnp.int32(0), {})
+    return mixed

@@ -1,21 +1,31 @@
 """Mixing matrices for decentralized parallel SGD (paper §IV-C, Eq. 14).
 
+This module is PURE TOPOLOGY MATH: who averages with whom, always as a
+doubly-stochastic matrix over the stacked learner axis.  Wire formats,
+bucketing and error feedback live in ``repro.core.transport`` — every
+mixer here is the exact-arithmetic (f32-wire) special case that the
+substrate delegates to on its fast path.
+
 The paper models one decentralized update as
 
     W_{k+1} = W_k · T  −  α_k · g(Φ_k, ξ_k)
 
 where the columns of ``W_k`` are per-learner model replicas and ``T`` is a
-doubly-stochastic mixing matrix.  Two canonical choices from the paper:
+doubly-stochastic mixing matrix.  Canonical choices:
 
 * ``T_1`` (ring): each learner averages with its immediate left/right
   neighbors — 1/3 on the tridiagonal (wrap-around).  On the TPU mesh this
   lowers to a pair of ``collective-permute`` ops over the learner axis.
 * ``T_u`` (uniform): global model averaging — the allreduce realization of
   a parameter server (paper Eq. 13).
+* hierarchical (paper §V H-ring): T_u inside each pod of ``pod_size``
+  learners, T_1 across pods — as a matrix, kron(T_1(L/p), T_u(p)).
+* exponential graph [Assran'19]: time-varying one-peer gossip; for
+  L = 2^m learners, exact consensus every m rounds.
 
-``apply_mixing`` is the collective-form implementation used by the training
-step (learner replicas stacked on a sharded leading axis); the explicit
-matrix constructors exist for analysis and the hypothesis/property tests
+The collective-form functions are used by the training step (learner
+replicas stacked on a sharded leading axis); the explicit matrix
+constructors exist for analysis and the hypothesis/property tests
 (doubly-stochasticity, T^n → T_u consensus).
 """
 from __future__ import annotations
@@ -52,6 +62,16 @@ def uniform_matrix(L: int) -> np.ndarray:
 
 def identity_matrix(L: int) -> np.ndarray:
     return np.eye(L)
+
+
+def hierarchical_matrix(L: int, pod_size: int) -> np.ndarray:
+    """kron(T_1 over pods, T_u within pod): uniform averaging inside each
+    pod of ``pod_size`` learners, ring mixing across the pod means (the
+    paper's §V hierarchical-ring as one doubly-stochastic matrix)."""
+    if L % pod_size:
+        raise ValueError(f"pod_size {pod_size} must divide L={L}")
+    return np.kron(ring_matrix(L // pod_size),
+                   uniform_matrix(pod_size))
 
 
 def is_doubly_stochastic(T: np.ndarray, atol: float = 1e-6) -> bool:
@@ -105,6 +125,63 @@ def mix_uniform(params):
     return jax.tree.map(one, params)
 
 
+def mix_hierarchical(params, *, pod_size: int):
+    """Collective form of :func:`hierarchical_matrix`: pod-mean, ring-mix
+    the pod means, broadcast back to the pod's members."""
+    def one(w):
+        L = w.shape[0]
+        if L % pod_size:
+            raise ValueError(f"pod_size {pod_size} must divide L={L}")
+        pods = L // pod_size
+        if pod_size == 1:
+            return mix_ring({"w": w})["w"]
+        wf = w.astype(jnp.float32).reshape(pods, pod_size, -1)
+        pm = jnp.mean(wf, axis=1)
+        if pods == 1:
+            mixed = pm
+        elif pods == 2:
+            mixed = (2.0 * pm + jnp.roll(pm, 1, axis=0)) / 3.0
+        else:
+            mixed = (pm + jnp.roll(pm, 1, axis=0)
+                     + jnp.roll(pm, -1, axis=0)) / 3.0
+        out = jnp.broadcast_to(mixed[:, None, :], wf.shape)
+        return out.reshape(w.shape).astype(w.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def make_exp_mixer(n_learners: int):
+    """One-peer exponential-graph gossip [Assran'19/Ying'21]: at step k each
+    learner averages with the peer 2^(k mod log2 L) hops away.
+
+    For L = 2^m this reaches EXACT consensus every m rounds (hypercube
+    gossip) — strictly faster mixing than the paper's T_1 ring at the same
+    per-step wire cost (ONE permute instead of two).  Time-varying T_k are
+    each doubly stochastic, so the Eq. 14 analysis still applies.
+    """
+    L = n_learners
+    m = max(int(np.log2(L)), 1)
+    assert 2 ** m == L or L == 1, "exponential graph wants power-of-2 learners"
+
+    def mix(params, step):
+        if L == 1:
+            return params
+        k = step % m
+
+        def one(w):
+            wf = w.astype(jnp.float32)
+            branches = [
+                (lambda shift: lambda ww=wf, s=shift:
+                 (ww + jnp.roll(ww, s, axis=0)) / 2.0)(2 ** i)
+                for i in range(m)
+            ]
+            return jax.lax.switch(k, branches).astype(w.dtype)
+
+        return jax.tree.map(one, params)
+
+    return mix
+
+
 def mix_matrix(params, T):
     """General doubly-stochastic mixing (research/analysis path)."""
     Tj = jnp.asarray(T, jnp.float32)
@@ -124,14 +201,15 @@ MIXERS = {
 
 
 def get_mixer(kind: str, n_learners: int = 0):
-    """Returns mixer(params, step) -> params.  'ring_q8' (int8 payloads)
-    and 'exp' (one-peer exponential graph) are the beyond-paper mixers from
-    repro.core.compression."""
+    """DEPRECATED shim (kept for analysis scripts/tests): returns
+    mixer(params, step) -> params.  New code should build a
+    ``repro.core.transport.Transport`` instead — 'ring_q8' is
+    Transport(topology='ring', wire='int8') and 'exp' is
+    Transport(topology='exp')."""
     if kind == "ring_q8":
         from repro.core.compression import mix_ring_q8
         return lambda p, step=None: mix_ring_q8(p)
     if kind == "exp":
-        from repro.core.compression import make_exp_mixer
         assert n_learners, "exp mixer needs the learner count"
         mixer = make_exp_mixer(n_learners)
         return lambda p, step=None: mixer(p, step)

@@ -40,6 +40,19 @@ Learner replicas are a stacked leading axis sharded over the mesh
 ('data' axis on one pod; 'pod' axis for hring), so each chip only ever
 holds its own learner's shard — replication costs no extra HBM per chip.
 
+Communication is factored out into the unified substrate of
+``repro.core.transport``: every strategy takes a :class:`Transport`
+(topology × wire codec × bucketing) and only contributes its *defaults*
+(``Strategy.topology``/``Strategy.wire``).  Previously-inexpressible
+combinations — BMUF with int8 block sync, hring with bf16 intra-pod +
+topk inter-pod, allreduce with sparsified payloads — are one config away
+(``comm_topology``/``comm_wire``/... knobs in configs/base.py, ``--comm-*``
+train flags; matrix in docs/strategies.md).  With the default f32 wire the
+substrate delegates to the exact mixers in ``repro.core.mixing`` and the
+update trajectories are bit-identical to the pre-substrate step.  Each
+replicated step also emits ``wire_bytes`` telemetry (analytic bytes sent
+per learner per round, from ``Transport.wire_bytes``).
+
 Variable-length batches (the ``lengths`` key of repro.data.pipeline) are
 aggregated with *frame weights*: each learner's/microbatch's masked-mean
 gradient is scaled by its valid-frame share so uniform mixing equals the
@@ -54,7 +67,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import mixing
+from repro.core.transport import Transport
 from repro.optim.optimizers import Optimizer
 
 
@@ -63,13 +76,23 @@ from repro.optim.optimizers import Optimizer
 # ---------------------------------------------------------------------------
 
 def split_learner_batch(batch, n_learners: int):
-    """(B, ...) -> (L, B/L, ...) on every input leaf."""
-    def one(x):
+    """(B, ...) -> (L, B/L, ...) on every input leaf.
+
+    Raises a ValueError (not a silent misshape) when the global batch is
+    not divisible by the learner count."""
+    def one(path, x):
         B = x.shape[0]
-        assert B % n_learners == 0, (B, n_learners)
+        if B % n_learners != 0:
+            key = jax.tree_util.keystr(path)
+            raise ValueError(
+                f"global batch size B={B} (batch key {key!r}) is not "
+                f"divisible by n_learners={n_learners}; every batch leaf "
+                f"needs leading dim a multiple of the learner count so "
+                f"each learner gets an equal shard (got remainder "
+                f"{B % n_learners})")
         return x.reshape(n_learners, B // n_learners, *x.shape[1:])
 
-    return jax.tree.map(one, batch)
+    return jax.tree_util.tree_map_with_path(one, batch)
 
 
 def _valid_frames(batch):
@@ -139,29 +162,41 @@ def consensus_distance(params):
 
 @dataclass(frozen=True)
 class Strategy:
-    """A distributed training strategy built around paper Eq. 14."""
+    """A distributed training strategy built around paper Eq. 14.
+
+    ``topology``/``wire`` are only the DEFAULT Transport of the strategy
+    (what you get when no explicit transport/config override is passed);
+    any strategy runs over any substrate configuration."""
 
     name: str
-    mixer: str                  # 'ring' | 'uniform' | 'none'
+    topology: str               # default Transport topology
+    wire: str = "f32"           # default Transport wire codec
     stale: bool = False         # gradients at W_{k-1} (async modeling)
     replicated: bool = True     # params carry a leading learner axis
     block_size: int = 0         # >0: BMUF block length (in steps)
     block_momentum: float = 0.9
     block_lr: float = 1.0
 
+    @property
+    def mixer(self) -> str:     # pre-substrate name, kept for callers
+        return self.topology
+
 
 STRATEGIES = {
-    "sc_psgd": Strategy("sc_psgd", mixer="uniform", replicated=False),
-    "sc_psgd_replicated": Strategy("sc_psgd_replicated", mixer="uniform"),
-    "sd_psgd": Strategy("sd_psgd", mixer="ring"),
-    "ad_psgd": Strategy("ad_psgd", mixer="ring", stale=True),
-    "downpour": Strategy("downpour", mixer="uniform", stale=True),
-    "bmuf": Strategy("bmuf", mixer="none", block_size=16),
-    "hring": Strategy("hring", mixer="ring", stale=True),
-    # beyond-paper (anchored in §IV-D comm-reduction survey; see
-    # repro.core.compression):
-    "ad_psgd_q8": Strategy("ad_psgd_q8", mixer="ring_q8", stale=True),
-    "ad_psgd_exp": Strategy("ad_psgd_exp", mixer="exp", stale=True),
+    "sc_psgd": Strategy("sc_psgd", topology="uniform", replicated=False),
+    "sc_psgd_replicated": Strategy("sc_psgd_replicated", topology="uniform"),
+    "sd_psgd": Strategy("sd_psgd", topology="ring"),
+    "ad_psgd": Strategy("ad_psgd", topology="ring", stale=True),
+    "downpour": Strategy("downpour", topology="uniform", stale=True),
+    # BMUF mixes only at block boundaries; 'uniform' is the block-sync
+    # topology (overridable like any other via the transport)
+    "bmuf": Strategy("bmuf", topology="uniform", block_size=16),
+    "hring": Strategy("hring", topology="hierarchical", stale=True),
+    # beyond-paper (anchored in §IV-D comm-reduction survey), now plain
+    # substrate configurations rather than bespoke mixers:
+    "ad_psgd_q8": Strategy("ad_psgd_q8", topology="ring", wire="int8",
+                           stale=True),
+    "ad_psgd_exp": Strategy("ad_psgd_exp", topology="exp", stale=True),
 }
 
 
@@ -169,12 +204,38 @@ def get_strategy(name: str) -> Strategy:
     return STRATEGIES[name]
 
 
+def default_transport(strategy: Strategy) -> Transport:
+    """The strategy's native substrate configuration (f32 wire, fused
+    payloads) — bit-identical to the pre-substrate mixers."""
+    return Transport(topology=strategy.topology, wire=strategy.wire)
+
+
+def transport_from_cfg(cfg, strategy: Strategy) -> Transport:
+    """Resolve the ``comm_*`` knobs of an ArchConfig against the
+    strategy defaults (empty string = keep the strategy default)."""
+    return Transport(
+        topology=getattr(cfg, "comm_topology", "") or strategy.topology,
+        wire=getattr(cfg, "comm_wire", "") or strategy.wire,
+        intra_wire=getattr(cfg, "comm_intra_wire", "") or "f32",
+        bucket_bytes=int(getattr(cfg, "comm_bucket_mb", 0) * 2 ** 20),
+        pod_size=getattr(cfg, "comm_pod_size", 1) or 1,
+        topk_frac=getattr(cfg, "comm_topk_frac", 0.01),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Train state / step builder
 # ---------------------------------------------------------------------------
 
-def init_state(strategy: Strategy, params, optimizer: Optimizer):
-    """params: already stacked with the learner dim if strategy.replicated."""
+def init_state(strategy: Strategy, params, optimizer: Optimizer,
+               transport: Optional[Transport] = None):
+    """params: already stacked with the learner dim if strategy.replicated.
+
+    Pass the SAME ``transport`` given to :func:`make_train_step`: wires
+    with error feedback (topk) carry their residuals in ``state['comm']``
+    (f32 regardless of the parameter dtype)."""
+    transport = transport if transport is not None \
+        else default_transport(strategy)
     state = {
         "params": params,
         "opt": (jax.vmap(optimizer.init)(params)
@@ -190,6 +251,8 @@ def init_state(strategy: Strategy, params, optimizer: Optimizer):
         state["anchor"] = copy(params)
         state["block_mom"] = jax.tree.map(
             lambda w: jnp.zeros(w.shape, jnp.float32), params)
+    if strategy.replicated and transport.needs_state:
+        state["comm"] = transport.init_comm(params)
     return state
 
 
@@ -200,7 +263,8 @@ def _learner_dim(params) -> int:
 def make_train_step(strategy: Strategy, loss_fn: Callable,
                     optimizer: Optimizer, lr_schedule: Callable,
                     *, n_learners: int = 1, microbatches: int = 1,
-                    with_consensus: bool = False, pre_split: bool = False):
+                    with_consensus: bool = False, pre_split: bool = False,
+                    transport: Optional[Transport] = None):
     """Build the jittable train step.
 
     loss_fn(params, batch) -> scalar, over UNstacked params/batch.
@@ -214,8 +278,19 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
     when the learner axis is 'pod': an in-step reshape of a data-sharded
     batch dim into (pod, data) is not GSPMD-representable and silently
     replicates the learner work), or flat (B, ...) to be reshaped here.
+
+    ``transport`` configures the communication substrate (topology ×
+    wire × bucketing; default: the strategy's native f32 configuration,
+    bit-identical to the pre-substrate step).  Replicated steps emit
+    ``metrics['wire_bytes']`` — analytic bytes sent per learner this
+    step (0 on non-sync BMUF steps).  Non-replicated sc_psgd averages
+    gradients through GSPMD, not the substrate, so it carries no
+    wire-byte telemetry (see docs/strategies.md).
     """
-    mixer = mixing.get_mixer(strategy.mixer, n_learners)
+    transport = transport if transport is not None \
+        else default_transport(strategy)
+    mix = (transport.make_mixer(n_learners) if strategy.replicated
+           else None)
 
     def grad_one(params, batch):
         return _accumulated_grad(loss_fn, params, batch, microbatches)
@@ -257,9 +332,12 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
         else:
             metrics["loss"] = jnp.mean(loss_l)
 
+        comm = state.get("comm", {})
+        wire_bytes = jnp.float32(transport.wire_bytes(state["params"]))
         if strategy.block_size:
             # BMUF: local SGD inside a block; blockwise model-update
-            # filtering at block boundaries.
+            # filtering at block boundaries.  The block sync goes through
+            # the substrate, so e.g. int8 block sync is one config away.
             upd_params, opt = jax.vmap(
                 optimizer.update, in_axes=(0, 0, 0, None)
             )(g_l, state["opt"], state["params"], lr)
@@ -267,8 +345,8 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
             is_sync = (step_no % strategy.block_size) == 0
 
             def do_sync(args):
-                params, anchor, mom = args
-                avg = mixing.mix_uniform(params)
+                params, anchor, mom, comm = args
+                avg, comm = mix(params, step_no, comm)
                 delta = jax.tree.map(
                     lambda a, b: (a.astype(jnp.float32)
                                   - b.astype(jnp.float32)), avg, anchor)
@@ -278,28 +356,33 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
                 new = jax.tree.map(
                     lambda b, m: (b.astype(jnp.float32) + m).astype(b.dtype),
                     anchor, mom)
-                return new, new, mom
+                return new, new, mom, comm
 
             def no_sync(args):
-                params, anchor, mom = args
-                return params, anchor, mom
+                params, anchor, mom, comm = args
+                return params, anchor, mom, comm
 
-            new_params, anchor, mom = jax.lax.cond(
+            new_params, anchor, mom, comm = jax.lax.cond(
                 is_sync, do_sync, no_sync,
-                (upd_params, state["anchor"], state["block_mom"]))
+                (upd_params, state["anchor"], state["block_mom"], comm))
             out = {"params": new_params, "opt": opt, "step": step_no,
                    "anchor": anchor, "block_mom": mom}
+            metrics["wire_bytes"] = jnp.where(is_sync, wire_bytes, 0.0)
         else:
             # Eq. 14: mixing of the current iterate is data-independent of
             # the gradient (evaluated at prev iterate when stale) -> XLA can
-            # schedule the collective concurrently with compute.
-            mixed = mixer(state["params"], state["step"])
+            # schedule the collective concurrently with compute; chunked
+            # buckets (transport.bucket_bytes) deepen that interleaving.
+            mixed, comm = mix(state["params"], state["step"], comm)
             new_params, opt = jax.vmap(
                 optimizer.update, in_axes=(0, 0, 0, None)
             )(g_l, state["opt"], mixed, lr)
             out = {"params": new_params, "opt": opt,
                    "step": state["step"] + 1}
+            metrics["wire_bytes"] = wire_bytes
 
+        if "comm" in state:
+            out["comm"] = comm
         if strategy.stale:
             out["prev_params"] = state["params"]
         if with_consensus:

@@ -65,16 +65,22 @@ def build_train_dryrun(cfg, mesh, rules, shape, *, multi_pod: bool):
     import functools
     loss_fn = functools.partial(
         model.loss_fn, batch_axis="" if strategy.replicated else "data")
+    # the same substrate train.py would run (comm_* knobs), so the
+    # HLO/collective picture matches the real step
+    transport = ST.transport_from_cfg(cfg, strategy)
     step = ST.make_train_step(
         strategy, loss_fn, sgd(), lambda s: jnp.float32(0.1),
         n_learners=n_learners, microbatches=cfg.microbatches,
-        pre_split=strategy.replicated)
+        pre_split=strategy.replicated, transport=transport)
 
     lead = ((n_learners, "learner"),) if strategy.replicated else ()
     params = spec_tree_to_sds(model.param_specs(), rules, extra_leading=lead)
     state = {"params": params, "opt": (), "step": _sds_scalar()}
     if strategy.stale:
         state["prev_params"] = params
+    if strategy.replicated and transport.needs_state:
+        # error-feedback trees as SDS (init_comm only reads leaf shapes)
+        state["comm"] = jax.eval_shape(transport.init_comm, params)
     inputs = model.input_specs(shape, "train")
     if strategy.replicated:
         # pre-split the global batch: (B, ...) -> (L, B/L, ...) with the

@@ -40,14 +40,21 @@ def setup_training(cfg, mesh, *, strategy_name: str = None,
                    n_learners: int = None, optimizer_name: str = "sgd",
                    lr_schedule=None, seed: int = 0, multi_pod: bool = False,
                    with_consensus: bool = False, kernel_impl: str = "jax",
-                   microbatches: int = None):
-    """Build sharded train state + jitted step for one arch on one mesh."""
+                   microbatches: int = None, transport=None):
+    """Build sharded train state + jitted step for one arch on one mesh.
+
+    ``transport`` overrides the communication substrate (topology × wire
+    × bucketing); default: the cfg's ``comm_*`` knobs resolved against
+    the strategy (see repro.core.transport and docs/strategies.md).
+    """
     strategy = ST.get_strategy(strategy_name or cfg.train_strategy)
     n_learners = n_learners if n_learners is not None else cfg.n_learners
     if not strategy.replicated:
         n_learners = 1
     microbatches = (microbatches if microbatches is not None
                     else cfg.microbatches)
+    if transport is None:
+        transport = ST.transport_from_cfg(cfg, strategy)
     model = build_model(cfg)
     rules = rules_for(cfg, mesh, multi_pod=multi_pod)
     opt = get_optimizer(optimizer_name)
@@ -60,7 +67,7 @@ def setup_training(cfg, mesh, *, strategy_name: str = None,
     step_fn = ST.make_train_step(
         strategy, loss_fn, opt, lr_schedule,
         n_learners=n_learners, microbatches=microbatches,
-        with_consensus=with_consensus)
+        with_consensus=with_consensus, transport=transport)
 
     pspecs = model.param_specs()
     lead = ((n_learners, "learner"),) if strategy.replicated else ()
@@ -71,11 +78,11 @@ def setup_training(cfg, mesh, *, strategy_name: str = None,
         if strategy.replicated:
             params = ST.stack_for_learners(params, n_learners)
         params = jax.tree.map(jax.device_put, params, param_shardings)
-        state = ST.init_state(strategy, params, opt)
+        state = ST.init_state(strategy, params, opt, transport=transport)
         jit_step = jax.jit(step_fn, donate_argnums=(0,))
 
     meta = dict(model=model, rules=rules, strategy=strategy,
-                n_learners=n_learners, mesh=mesh)
+                n_learners=n_learners, mesh=mesh, transport=transport)
     return state, jit_step, meta
 
 
@@ -114,6 +121,30 @@ def main(argv=None):
                          "off, -1 = auto from the VMEM budget); cuts the "
                          "O(T) residual stash to O(T/K) for long "
                          "utterances")
+    ap.add_argument("--comm-topology", default="",
+                    choices=["", "uniform", "ring", "hierarchical", "exp",
+                             "none"],
+                    help="mixing topology override (default: the "
+                         "strategy's own; docs/strategies.md)")
+    ap.add_argument("--comm-wire", default="",
+                    choices=["", "f32", "bf16", "int8", "topk"],
+                    help="wire codec for mixing payloads (default: the "
+                         "strategy's own, f32 for all paper strategies)")
+    ap.add_argument("--comm-intra-wire", default="",
+                    choices=["", "f32", "bf16", "int8"],
+                    help="hierarchical topology: codec of the intra-pod "
+                         "allreduce (inter-pod uses --comm-wire; topk is "
+                         "gossip-only and not valid here)")
+    ap.add_argument("--comm-bucket-mb", type=int, default=0,
+                    help="chunk mixing payloads into buckets of this many "
+                         "MB so XLA can interleave them with backward "
+                         "compute (0 = one fused payload per tensor)")
+    ap.add_argument("--comm-pod-size", type=int, default=0,
+                    help="hierarchical topology: learners per pod (0 = "
+                         "cfg value)")
+    ap.add_argument("--comm-topk-frac", type=float, default=0.0,
+                    help="topk wire: fraction of entries shipped (0 = "
+                         "cfg value, 0.01)")
     ap.add_argument("--var-len", action="store_true",
                     help="variable-length utterances: batches carry a "
                          "'lengths' key, loss/BLSTM/aggregation mask "
@@ -129,18 +160,29 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if (args.block_b or args.vmem_budget_mb or args.stash_dtype
-            or args.seq_chunk):
-        import dataclasses
-        changes = {}
-        if args.block_b:
-            changes["lstm_block_b"] = args.block_b
-        if args.vmem_budget_mb:
-            changes["lstm_vmem_budget_mb"] = args.vmem_budget_mb
-        if args.stash_dtype:
-            changes["lstm_stash_dtype"] = args.stash_dtype
-        if args.seq_chunk:
-            changes["lstm_seq_chunk"] = args.seq_chunk
+    import dataclasses
+    changes = {}
+    if args.block_b:
+        changes["lstm_block_b"] = args.block_b
+    if args.vmem_budget_mb:
+        changes["lstm_vmem_budget_mb"] = args.vmem_budget_mb
+    if args.stash_dtype:
+        changes["lstm_stash_dtype"] = args.stash_dtype
+    if args.seq_chunk:
+        changes["lstm_seq_chunk"] = args.seq_chunk
+    if args.comm_topology:
+        changes["comm_topology"] = args.comm_topology
+    if args.comm_wire:
+        changes["comm_wire"] = args.comm_wire
+    if args.comm_intra_wire:
+        changes["comm_intra_wire"] = args.comm_intra_wire
+    if args.comm_bucket_mb:
+        changes["comm_bucket_mb"] = args.comm_bucket_mb
+    if args.comm_pod_size:
+        changes["comm_pod_size"] = args.comm_pod_size
+    if args.comm_topk_frac:
+        changes["comm_topk_frac"] = args.comm_topk_frac
+    if changes:
         cfg = dataclasses.replace(cfg, **changes)
     seq_len = args.seq_len or (21 if cfg.family == "lstm" else 128)
     n_learners = args.learners if args.learners is not None else cfg.n_learners
@@ -192,6 +234,11 @@ def main(argv=None):
                     # padding efficiency: valid / (B * Tpad) frames —
                     # bucketing exists to push this toward 1.0
                     line += f" pad_eff {valid_frames/padded_frames:.2f}"
+                if "wire_bytes" in metrics:
+                    # analytic bytes sent per learner this step
+                    # (Transport.wire_bytes; docs/strategies.md)
+                    wb = float(metrics["wire_bytes"])
+                    line += f" wire {wb/2**20:.2f}MB"
                 if "consensus" in metrics:
                     line += f" consensus {float(metrics['consensus']):.3e}"
                 print(line, flush=True)

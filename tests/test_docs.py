@@ -20,9 +20,17 @@ def test_readme_flag_reference_complete():
     assert check_docs.check_flag_reference() == []
 
 
+def test_readme_config_reference_complete():
+    knobs = check_docs.declared_config_knobs()
+    # sanity: the ast walk actually sees ArchConfig fields
+    assert "comm_wire" in knobs and "lstm_seq_chunk" in knobs
+    assert check_docs.check_config_reference() == []
+
+
 def test_checker_detects_missing_flag(tmp_path):
     """The checker is not vacuously green: a README without the flags
-    fails, a markdown file with a dangling link fails."""
+    fails, a markdown file with a dangling link fails, an undocumented
+    ArchConfig knob fails."""
     (tmp_path / "src/repro/launch").mkdir(parents=True)
     for src in check_docs.FLAG_SOURCES:
         (tmp_path / src).write_text('ap.add_argument("--ghost-flag")\n')
@@ -30,3 +38,7 @@ def test_checker_detects_missing_flag(tmp_path):
     assert check_docs.check_flag_reference(tmp_path) != []
     (tmp_path / "doc.md").write_text("[dangling](missing/file.md)\n")
     assert check_docs.check_links(tmp_path) != []
+    (tmp_path / "src/repro/configs").mkdir(parents=True)
+    (tmp_path / check_docs.CONFIG_SOURCE).write_text(
+        "class ArchConfig:\n    ghost_knob: int = 0\n")
+    assert check_docs.check_config_reference(tmp_path) != []

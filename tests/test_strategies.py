@@ -129,6 +129,23 @@ def test_consensus_decreases_with_mixing_strategies():
     assert float(m["consensus"]) < 0.05
 
 
+def test_split_learner_batch_indivisible_raises_clear_error():
+    """B % L != 0 must fail loudly, naming B, L and the offending key —
+    not silently misbehave (regression: was a bare assert tuple)."""
+    batch = {"x": jnp.zeros((10, 3)), "y": jnp.zeros((10,))}
+    with pytest.raises(ValueError) as ei:
+        ST.split_learner_batch(batch, 4)
+    msg = str(ei.value)
+    assert "B=10" in msg and "n_learners=4" in msg and "'x'" in msg
+    # divisible batches still split fine
+    out = ST.split_learner_batch({"x": jnp.zeros((12, 3))}, 4)
+    assert out["x"].shape == (4, 3, 3)
+    # ragged leaves: the first offending KEY is named
+    with pytest.raises(ValueError, match="'y'"):
+        ST.split_learner_batch({"x": jnp.zeros((12, 3)),
+                                "y": jnp.zeros((10,))}, 4)
+
+
 def test_average_learners_and_stack_roundtrip():
     p = {"w": jnp.arange(8.0)}
     stacked = ST.stack_for_learners(p, 4)

@@ -394,6 +394,54 @@ def test_microbatch_accumulation_frame_weighted():
                                atol=1e-6)
 
 
+def test_hring_pre_split_frame_weighted_aggregation():
+    """hring with ``pre_split=True`` (the multi-pod layout: batch arrives
+    already (L, B/L, ...) on the pod axis) + variable-length batches:
+    frame-weighted aggregation across the pod axis must match both the
+    flat-batch path bit-for-bit and the explicit Eq.-14 reference."""
+    from repro.core import mixing
+
+    L, lr = 2, 0.1
+    strat = ST.get_strategy("hring")
+    batch = _linear_batch()                     # lengths [6, 1, 3, 2]
+    pre = ST.split_learner_batch(batch, L)
+    params = {"w": jnp.arange(8, dtype=jnp.float32) * 0.1}
+    stacked = ST.stack_for_learners(params, L)
+
+    step_flat = jax.jit(ST.make_train_step(
+        strat, _linear_masked_loss, sgd(), constant(lr), n_learners=L))
+    step_pre = jax.jit(ST.make_train_step(
+        strat, _linear_masked_loss, sgd(), constant(lr), n_learners=L,
+        pre_split=True))
+
+    s_flat = ST.init_state(strat, stacked, sgd())
+    s_pre = ST.init_state(strat, stacked, sgd())
+    for k in range(3):                          # staleness kicks in at k>0
+        s_flat, m_flat = step_flat(s_flat, batch)
+        s_pre, m_pre = step_pre(s_pre, pre)
+    np.testing.assert_array_equal(np.asarray(s_flat["params"]["w"]),
+                                  np.asarray(s_pre["params"]["w"]))
+    np.testing.assert_array_equal(np.asarray(m_flat["loss"]),
+                                  np.asarray(m_pre["loss"]))
+
+    # one-step Eq.-14 reference: mixing over the pod axis (hring default
+    # pod_size=1 -> T_1 ring) of the CURRENT iterate, frame-weighted
+    # stale gradients (hring grads at W_{k-1} = initial params here)
+    s0 = ST.init_state(strat, stacked, sgd())
+    s1, m1 = step_pre(s0, pre)
+    g_l = jax.vmap(jax.grad(_linear_masked_loss))(stacked, pre)
+    frames = np.asarray(pre["lengths"].sum(axis=1), np.float32)
+    wgt = frames / frames.mean()
+    mixed = mixing.mix_ring(stacked)
+    ref = np.asarray(mixed["w"]) - lr * wgt[:, None] * np.asarray(g_l["w"])
+    np.testing.assert_allclose(np.asarray(s1["params"]["w"]), ref,
+                               atol=1e-6)
+    # reported loss is the frame-weighted (= global masked) mean
+    np.testing.assert_allclose(float(m1["loss"]),
+                               float(_linear_masked_loss(params, batch)),
+                               rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # CTC input-length masking
 # ---------------------------------------------------------------------------

@@ -2,7 +2,7 @@
 """Docs consistency checker (the CI `docs` job; also run as a tier-1
 test via tests/test_docs.py).
 
-Two checks, both against the working tree:
+Three checks, all against the working tree:
 
 1. **Intra-repo markdown links** — every relative `[text](target)` link
    in a tracked *.md file must resolve to an existing file/directory
@@ -11,11 +11,15 @@ Two checks, both against the working tree:
    `src/repro/launch/train.py` and `src/repro/launch/serve.py` must
    appear in README.md, so the CLI surface and its documentation cannot
    drift apart.
+3. **README config-knob reference** — every `ArchConfig` field of
+   `src/repro/configs/base.py` must be mentioned in README.md (as
+   `` `name` ``), so new config knobs cannot land undocumented.
 
 Exit status is non-zero with one line per problem.
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -75,8 +79,32 @@ def check_flag_reference(root: Path = ROOT) -> list:
             if f"`{flag}`" not in readme]
 
 
+CONFIG_SOURCE = "src/repro/configs/base.py"
+
+
+def declared_config_knobs(root: Path = ROOT) -> list:
+    """ArchConfig field names parsed (ast, no import) from configs/base.py."""
+    tree = ast.parse((root / CONFIG_SOURCE).read_text(encoding="utf-8"))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "ArchConfig":
+            return [stmt.target.id for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)]
+    return []
+
+
+def check_config_reference(root: Path = ROOT) -> list:
+    """ArchConfig knobs missing from the README config reference."""
+    readme = (root / "README.md").read_text(encoding="utf-8")
+    return [f"README.md: ArchConfig knob `{knob}` ({CONFIG_SOURCE}) "
+            f"missing from the config reference"
+            for knob in declared_config_knobs(root)
+            if f"`{knob}`" not in readme]
+
+
 def main() -> int:
-    problems = check_links() + check_flag_reference()
+    problems = (check_links() + check_flag_reference()
+                + check_config_reference())
     for p in problems:
         print(p)
     if problems:
@@ -84,7 +112,8 @@ def main() -> int:
         return 1
     n_md = len(list(iter_markdown(ROOT)))
     print(f"docs OK: {n_md} markdown files, "
-          f"{len(declared_flags())} CLI flags documented")
+          f"{len(declared_flags())} CLI flags + "
+          f"{len(declared_config_knobs())} config knobs documented")
     return 0
 
 
