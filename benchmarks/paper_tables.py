@@ -197,3 +197,78 @@ def bench_compression():
         rows.append((f"compression/ad_psgd_speedup/{name}", t_single / t,
                      f"L={L}, payload x{payload / model_bytes:.3g}"))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Recognition performance — the paper's third axis (WER tables; the
+# companion 1904.04956 reports (A)D-PSGD vs sync SGD as WER deltas)
+# ---------------------------------------------------------------------------
+
+def bench_decode_wer(steps: int = 50, L: int = 2):
+    """TER per strategy on a held-out synthetic set (REAL training): the
+    reduced BLSTM is trained with CTC under sync SC-PSGD and AD-PSGD,
+    the learner consensus is decoded with greedy best-path and the
+    sum-semiring prefix beam (repro.decode), and the table reports
+    per-strategy TER plus the async-vs-sync delta — the synthetic
+    analogue of the paper's Hub5'00 WER comparison."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.core import strategies as ST
+    from repro.data import make_dataset
+    from repro.decode import beam_decode
+    from repro.eval.metrics import greedy_ctc_decode, token_error_rate
+    from repro.models import build_model
+    from repro.models.ctc import collapse_frame_labels, ctc_loss
+    from repro.models.lstm import forward
+    from repro.optim.optimizers import sgd
+    from repro.optim.schedules import constant
+    from repro.sharding import init_spec_tree
+
+    cfg = get_arch("swb2000-blstm").reduced()
+    model = build_model(cfg)
+    ds = make_dataset(cfg, seq_len=21, batch=4 * L, seed=0)
+    U = 6
+
+    def with_ctc(b):
+        seqs, _ = collapse_frame_labels(b["labels"], max_len=U)
+        return {"features": b["features"], "ctc": seqs}
+
+    def loss_fn(p, batch):
+        return ctc_loss(forward(cfg, p, batch["features"]), batch["ctc"])
+
+    heldout = [ds.batch_at(10_000 + i) for i in range(2)]
+    rows, ter = [], {}
+    for name in ("sc_psgd_replicated", "ad_psgd"):
+        strat = ST.get_strategy(name)
+        params = ST.stack_for_learners(
+            init_spec_tree(model.param_specs(), jax.random.PRNGKey(0)), L)
+        state = ST.init_state(strat, params, sgd())
+        step = jax.jit(ST.make_train_step(strat, loss_fn, sgd(),
+                                          constant(0.03), n_learners=L))
+        t0 = time.time()
+        for k in range(steps):
+            state, _ = step(state, with_ctc(ds.batch_at(k)))
+        avg = ST.average_learners(state["params"])
+
+        refs, hyp_g, hyp_b = [], [], []
+        for hb in heldout:
+            seqs, lens = collapse_frame_labels(hb["labels"], max_len=U)
+            refs += [list(s[:n]) for s, n in zip(seqs, lens)]
+            logits = np.asarray(
+                forward(cfg, avg, jnp.asarray(hb["features"])), np.float32)
+            hyp_g += greedy_ctc_decode(logits)
+            hyp_b += beam_decode(jnp.asarray(logits), beam=8,
+                                 semiring="sum")
+        ter[name] = token_error_rate(refs, hyp_b)
+        rows.append((f"decode_wer/ter_greedy/{name}",
+                     token_error_rate(refs, hyp_g),
+                     f"{steps} CTC steps, L={L}, "
+                     f"{time.time() - t0:.1f}s wall"))
+        rows.append((f"decode_wer/ter_beam8/{name}", ter[name],
+                     "sum-semiring prefix beam, consensus params"))
+    rows.append(("decode_wer/ter_delta_ad_vs_sync",
+                 ter["ad_psgd"] - ter["sc_psgd_replicated"],
+                 "paper framing: async WER - sync WER (~0 is the claim)"))
+    return rows

@@ -28,6 +28,8 @@ def all_benches():
         ("kernel_microbench", _kernel_microbench),
         ("varlen_bucketing", _varlen_bucketing),
         ("longseq", _longseq),
+        ("decode_microbench", _decode_microbench),
+        ("decode_wer", T.bench_decode_wer),
     ]
 
 
@@ -181,6 +183,67 @@ def _longseq():
         rows.append((f"longseq/pallas_interp_fwd_bwd_{name}_ms",
                      (time.perf_counter() - t0) / 2 * 1e3,
                      f"B={Bk} T={Tk} interpret cpu"))
+    return rows
+
+
+def _decode_microbench():
+    """Greedy vs CTC prefix-beam decode on synthetic peaky posteriors
+    (planted token paths + Gaussian noise, variable lengths): TER of
+    best-path vs the max- and sum-semiring beams (the sum beam recovers
+    mass spread over alignments that best-path drops), plus decode
+    latency/frames-s of the jitted jax path vs the Pallas inner-step
+    kernel in interpret mode (relative trajectory, not TPU numbers)."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.decode import beam_search
+    from repro.eval.metrics import (collapse_labels, greedy_ctc_decode,
+                                    token_error_rate)
+
+    B, T, V, K = 8, 40, 64, 8
+    rng = np.random.default_rng(0)
+    path = rng.integers(0, V, size=(B, T)).astype(np.int32)
+    path[rng.random((B, T)) < 0.5] = 0            # blank-dominated frames
+    lengths = rng.integers(T // 2, T + 1, size=B).astype(np.int32)
+    logits = (2.0 * (np.arange(V)[None, None, :] == path[:, :, None])
+              + rng.normal(0.0, 1.0, size=(B, T, V))).astype(np.float32)
+    refs = collapse_labels(path, lengths, blank=0)
+
+    rows = []
+    hyp_g = greedy_ctc_decode(logits, lengths)
+    rows.append(("decode/ter_greedy", token_error_rate(refs, hyp_g),
+                 "best-path baseline"))
+    for semiring in ("max", "sum"):
+        toks, lens, _ = beam_search(jnp.asarray(logits),
+                                    jnp.asarray(lengths), beam=K,
+                                    semiring=semiring)
+        toks, lens = np.asarray(toks), np.asarray(lens)
+        hyp = [list(map(int, r[:n])) for r, n in zip(toks, lens)]
+        rows.append((f"decode/ter_beam{K}_{semiring}",
+                     token_error_rate(refs, hyp),
+                     "acceptance: sum <= greedy"))
+
+    for impl in ("jax", "pallas"):
+        fn = jax.jit(functools.partial(
+            beam_search, beam=K, semiring="sum", impl=impl,
+            interpret=True))
+        args = (jnp.asarray(logits), jnp.asarray(lengths))
+        jax.block_until_ready(fn(*args))          # compile
+        n = 3 if impl == "jax" else 1
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        dt = (time.time() - t0) / n
+        rows.append((f"decode/beam_ms_{impl}", dt * 1e3,
+                     f"B={B} T={T} V={V} K={K}"
+                     + (" interpret cpu" if impl == "pallas" else " cpu")))
+        if impl == "jax":
+            rows.append(("decode/beam_kframes_per_s",
+                         float(lengths.sum()) / dt / 1e3,
+                         "valid kframes/s, jitted jax beam"))
     return rows
 
 

@@ -80,7 +80,18 @@ def main():
     hl = float(np.mean([float(model.loss_fn(avg, hb)) for hb in heldout]))
     print(f"final heldout CE {hl:.4f} "
           f"(uniform = {np.log(cfg.vocab):.2f}); "
-          f"checkpopint -> {args.ckpt_dir}")
+          f"checkpoint -> {args.ckpt_dir}")
+
+    # the paper's third axis: recognition quality of the consensus model
+    # (masked FER + greedy/beam TER; docs/decoding.md conventions)
+    from repro.launch.evaluate import evaluate_params
+
+    m = evaluate_params(cfg, avg, batches=2, batch=batch, seq_len=21,
+                        var_len=True)
+    print(f"recognition: FER {m['fer']:.3f}  TER greedy "
+          f"{m['ter_greedy']:.3f}  beam{m['beam']} {m['ter_beam']:.3f}  "
+          f"({m['frames_per_s']:.0f} frames/s, "
+          f"{m['decoded_tok_per_s']:.0f} tok/s)")
 
 
 if __name__ == "__main__":

@@ -132,6 +132,17 @@ class ArchConfig:
     # topk wire: fraction of entries shipped per bucket
     comm_topk_frac: float = 0.01
 
+    # ---- CTC decode / recognition quality (repro/decode;
+    # docs/decoding.md; --beam-* flags of evaluate.py and serve.py) ----
+    # prefix-beam width of the eval/serve decoder (1 = greedy best-path)
+    beam_width: int = 8
+    # prefix-score merge: 'max' (Viterbi — beam=1 provably equals greedy
+    # best-path) | 'sum' (classic log-semiring prefix beam search)
+    beam_semiring: str = "max"
+    # length-normalization alpha for the final hypothesis ranking
+    # (score / max(len, 1)**alpha; 0 = raw log-prob)
+    beam_len_norm: float = 0.0
+
     # which shapes this arch supports (see DESIGN.md skip notes)
     skip_shapes: tuple = ()
 

@@ -34,6 +34,11 @@ SWB2000_BLSTM = register(
         # long-utterance runs set lstm_seq_chunk (--seq-chunk) to trade
         # one recompute forward for an O(T/K) stash (docs/kernels.md)
         lstm_seq_chunk=0,
+        # recognition scoring (launch/evaluate.py, docs/decoding.md):
+        # Viterbi prefix beam over the CD-state posteriors; width 8 is
+        # the quality/latency knee at the synthetic vocab scale
+        beam_width=8,
+        beam_semiring="max",
         # frame classifier: no autoregressive decode step
         skip_shapes=("prefill_32k", "decode_32k", "long_500k"),
         train_strategy="ad_psgd",

@@ -1,0 +1,14 @@
+"""Recognition-quality decode subsystem: batched CTC prefix beam search
+(jnp + Pallas kernel), streaming beam-state carry, and the serving
+argmax kernel.  Contracts in docs/decoding.md."""
+from repro.decode.beam import (  # noqa: F401
+    BeamState,
+    beam_decode,
+    beam_occupancy,
+    beam_search,
+    decode_chunk,
+    finalize,
+    init_state,
+    reset_rows,
+)
+from repro.decode.kernel import argmax_tokens  # noqa: F401

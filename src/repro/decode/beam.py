@@ -1,0 +1,360 @@
+"""Batched CTC prefix beam search in JAX — the recognition-quality
+subsystem behind ``launch/evaluate.py`` and the ASR serving mode of
+``launch/serve.py``.
+
+The paper's third evaluation axis is recognition performance (WER on
+Hub5'00; the companion 1904.04956 reports its headline results as WER
+deltas between (A)D-PSGD and sync SGD).  This module scores checkpoints
+the same way at synthetic scale: it turns per-frame CTC posteriors
+(B, T, V) into token sequences with a *prefix* beam search (Hannun et
+al. 2014), vectorized over both the batch and the beam so the whole
+decode is one ``lax.scan`` over frames.
+
+Semirings
+---------
+Per prefix we carry two log scores — ``p_b`` (alignments ending in
+blank) and ``p_nb`` (ending in the prefix's last token) — and combine
+contributions with a *semiring merge*:
+
+* ``semiring='max'`` (default): Viterbi scoring — a prefix's score is
+  its single best alignment.  With ``beam=1`` this is **provably
+  identical to greedy best-path decoding**: the surviving prefix is the
+  collapse of the running frame-argmax path, because every candidate's
+  frame increment is bounded by ``max_c logp[c]`` and the candidate that
+  achieves the bound is exactly the collapse of (greedy path + argmax
+  token) — appending the argmax token extends the prefix iff greedy's
+  collapse does (repeat tokens route through ``p_nb`` when the best
+  alignment ends non-blank, through ``p_b`` after a blank).  The
+  equivalence is locked by a test against ``eval.metrics
+  .greedy_ctc_decode``.
+* ``semiring='sum'``: the classic log-semiring prefix beam search —
+  scores sum (``logaddexp``) over all alignments of a prefix, which is
+  what makes beam > 1 *better* than best-path: probability mass spread
+  over several alignments of one prefix can beat the single best raw
+  path (the blank-dominated-frames case).
+
+Beam state and the merge
+------------------------
+:class:`BeamState` is a pytree of fixed-shape arrays — tokens
+(B, K, U), lengths, last token, a rolling prefix hash, the (p_b, p_nb)
+scores and a per-row frame counter — so it can be carried through
+``lax.scan``, donated, or held across calls (the streaming mode).  The
+per-frame step (:func:`frame_step_scores`, shared verbatim by the
+Pallas kernel in ``decode/kernel.py``) expands K stays + K·(V-1)
+extends, merges duplicate prefixes, and selects the top K:
+
+* an extend of prefix k by token c collides with an in-beam prefix j
+  iff ``len[j] == len[k] + 1`` and ``hash[j] == hash[k]*P + c`` — and
+  the only token that can make prefix j is ``c == last[j]``, so the
+  merge is a (K × K) check rather than (K × V × K);
+* prefix identity uses a rolling polynomial hash (``P = 1_000_003``,
+  int32 wraparound) plus the length check; distinct same-length
+  prefixes with equal hashes are astronomically unlikely (the numpy
+  oracle in ``decode/ref.py`` compares real prefixes and the parity
+  tests pass bit-for-bit);
+* top-K is K iterative argmax passes (first-occurrence tie break), the
+  same procedure in the jnp and Pallas paths so they match bit-for-bit.
+
+Streaming / chunked decode
+--------------------------
+``state = init_state(B, beam, max_len)`` then repeated
+``state = decode_chunk(state, logits_chunk, lengths)`` — the carry *is*
+the beam state — then ``finalize(state)``.  ``state.t`` counts consumed
+frames per row; rows with ``t >= lengths[b]`` are frozen (the decode
+analogue of the ``lengths`` batch contract in ``repro.data.pipeline``),
+so feeding one T-frame call or T/C chunked calls is bit-identical.
+``reset_rows`` re-arms individual rows for continuous-batching servers
+(``launch/serve.py`` carries one BeamState across its slot pool).
+
+Length-normalized scoring: ``finalize(..., len_norm=a)`` ranks final
+beams by ``score / max(len, 1)**a`` (Wu et al. style), countering the
+short-hypothesis bias of raw log-probabilities.  See docs/decoding.md
+for the full contract and the kernel VMEM math.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+HASH_P = 1_000_003        # rolling-hash multiplier (int32 wraparound)
+
+
+def _merge_fn(semiring: str):
+    if semiring == "max":
+        return jnp.maximum
+    if semiring == "sum":
+        return jnp.logaddexp
+    raise ValueError(f"semiring must be 'max' or 'sum', got {semiring!r}")
+
+
+def _reduce_fn(semiring: str):
+    if semiring == "max":
+        return lambda x, axis: jnp.max(x, axis=axis)
+    if semiring == "sum":
+        return lambda x, axis: jax.nn.logsumexp(x, axis=axis)
+    raise ValueError(f"semiring must be 'max' or 'sum', got {semiring!r}")
+
+
+class BeamState(NamedTuple):
+    """Carry of the streaming decode (all arrays, scan/jit friendly)."""
+
+    tokens: jax.Array        # (B, K, U) i32, -1 padded
+    lens: jax.Array          # (B, K) i32 prefix lengths
+    last: jax.Array          # (B, K) i32 last token (-1 = empty prefix)
+    phash: jax.Array         # (B, K) i32 rolling prefix hash
+    p_b: jax.Array           # (B, K) f32 log score, alignments ending blank
+    p_nb: jax.Array          # (B, K) f32 log score, ending non-blank
+    t: jax.Array             # (B,) i32 frames consumed (freeze counter)
+
+
+def init_state(batch: int, beam: int, max_len: int) -> BeamState:
+    """Fresh beams: slot 0 holds the empty prefix (p_b = 0), the rest are
+    NEG placeholders that real candidates displace on the first frame."""
+    p_b = jnp.where(jnp.arange(beam)[None, :] == 0, 0.0, NEG)
+    return BeamState(
+        tokens=jnp.full((batch, beam, max_len), -1, jnp.int32),
+        lens=jnp.zeros((batch, beam), jnp.int32),
+        last=jnp.full((batch, beam), -1, jnp.int32),
+        phash=jnp.zeros((batch, beam), jnp.int32),
+        p_b=jnp.broadcast_to(p_b, (batch, beam)).astype(jnp.float32),
+        p_nb=jnp.full((batch, beam), NEG, jnp.float32),
+        t=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def reset_rows(state: BeamState, mask) -> BeamState:
+    """Re-arm rows where ``mask`` (B,) is True (serving slot admission)."""
+    B, K, U = state.tokens.shape
+    fresh = init_state(B, K, U)
+    pick2 = mask[:, None]
+    return BeamState(
+        tokens=jnp.where(mask[:, None, None], fresh.tokens, state.tokens),
+        lens=jnp.where(pick2, fresh.lens, state.lens),
+        last=jnp.where(pick2, fresh.last, state.last),
+        phash=jnp.where(pick2, fresh.phash, state.phash),
+        p_b=jnp.where(pick2, fresh.p_b, state.p_b),
+        p_nb=jnp.where(pick2, fresh.p_nb, state.p_nb),
+        t=jnp.where(mask, fresh.t, state.t),
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-frame step: candidate expansion + duplicate merge + top-K
+# ---------------------------------------------------------------------------
+
+def frame_step_scores(logp, p_b, p_nb, last, phash, plen, *, blank: int,
+                      max_len: int, semiring: str):
+    """One frame of prefix beam search, batched.
+
+    Pure array math shared bit-for-bit by the jnp path and the Pallas
+    kernel body (``decode/kernel.py`` calls exactly this function on
+    VMEM-resident blocks).
+
+    logp: (B, V) f32 log-softmax of the frame; p_b/p_nb: (B, K) f32;
+    last/phash/plen: (B, K) i32.  Returns ``(sel, new_pb, new_pnb)``
+    where ``sel`` (B, K) i32 indexes the flattened (K*V,) candidate grid
+    — candidate ``k*V + c`` is "extend prefix k with c", except
+    ``c == blank`` which is "prefix k stays" — ranked best-first.
+    """
+    B, V = logp.shape
+    K = p_b.shape[1]
+    merge = _merge_fn(semiring)
+    reduce_ = _reduce_fn(semiring)
+
+    tot = merge(p_b, p_nb)                                       # (B, K)
+    stay_pb = tot + logp[:, blank][:, None]
+    lp_last = jnp.take_along_axis(logp, jnp.maximum(last, 0), axis=1)
+    stay_pnb = jnp.where(last >= 0, p_nb + lp_last, NEG)
+
+    c_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2)
+    base = jnp.where(c_ids == last[:, :, None], p_b[:, :, None],
+                     tot[:, :, None])
+    ext = base + logp[:, None, :]                                # (B, K, V)
+    ext = jnp.where(c_ids == blank, NEG, ext)
+    ext = jnp.where(plen[:, :, None] >= max_len, NEG, ext)       # U cap
+
+    # Duplicate merge: extend(k, c) equals in-beam prefix j iff
+    # len[j] == len[k]+1 and hash[j] == hash[k]*P + c; the only viable
+    # token is c == last[j].  match[b, k, j]: parent k's extend-by-
+    # last[j] collides with stay j.
+    match = ((plen[:, None, :] == plen[:, :, None] + 1)
+             & (phash[:, None, :]
+                == phash[:, :, None] * HASH_P + last[:, None, :])
+             & (last[:, None, :] >= 0))                          # (B, K, K)
+    idx = jnp.broadcast_to(jnp.maximum(last, 0)[:, None, :], (B, K, K))
+    e = jnp.take_along_axis(ext, idx, axis=2)    # e[b,k,j]=ext[b,k,last[j]]
+    contrib = reduce_(jnp.where(match, e, NEG), 1)               # (B, K)
+    stay_pnb = merge(stay_pnb, contrib)
+    for j in range(K):                           # kill the merged extends
+        cj = jnp.maximum(last[:, j], 0)
+        hit = match[:, :, j][:, :, None] & (c_ids == cj[:, None, None])
+        ext = jnp.where(hit, NEG, ext)
+
+    # Candidate grid: blank column carries the stay total.
+    stay_tot = merge(stay_pb, stay_pnb)
+    cand = jnp.where(c_ids == blank, stay_tot[:, :, None], ext)
+    cand = cand.reshape(B, K * V)
+    ext_flat = ext.reshape(B, K * V)
+
+    # Top-K by K iterative argmax passes (first-occurrence tie break —
+    # identical in jnp and Pallas, so the two impls match bit-for-bit).
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (B, K * V), 1)
+    sels = []
+    work = cand
+    for _ in range(K):
+        best = jnp.argmax(work, axis=1).astype(jnp.int32)        # (B,)
+        sels.append(best)
+        work = jnp.where(col_ids == best[:, None], NEG, work)
+    sel = jnp.stack(sels, axis=1)                                # (B, K)
+
+    parent = sel // V
+    is_stay = (sel % V) == blank
+    new_pb = jnp.where(is_stay, jnp.take_along_axis(stay_pb, parent, 1),
+                       NEG)
+    new_pnb = jnp.where(is_stay, jnp.take_along_axis(stay_pnb, parent, 1),
+                        jnp.take_along_axis(ext_flat, sel, 1))
+    return sel, new_pb, new_pnb
+
+
+def apply_selection(state: BeamState, sel, new_pb, new_pnb, *, blank: int,
+                    vocab: int) -> BeamState:
+    """Materialize the selected candidates into the next beam state
+    (token gather/append, hash/length bookkeeping — jnp on both impls;
+    the kernel only computes ``sel`` and the scores)."""
+    B, K, U = state.tokens.shape
+    parent = sel // vocab
+    c = (sel % vocab).astype(jnp.int32)
+    is_stay = c == blank
+
+    tokens = jnp.take_along_axis(state.tokens, parent[:, :, None], axis=1)
+    plen = jnp.take_along_axis(state.lens, parent, 1)
+    phash = jnp.take_along_axis(state.phash, parent, 1)
+    plast = jnp.take_along_axis(state.last, parent, 1)
+
+    u_ids = jnp.arange(U)[None, None, :]
+    put = (~is_stay)[:, :, None] & (u_ids == plen[:, :, None])
+    tokens = jnp.where(put, c[:, :, None], tokens)
+    return state._replace(
+        tokens=tokens,
+        lens=plen + (~is_stay).astype(jnp.int32),
+        last=jnp.where(is_stay, plast, c),
+        phash=jnp.where(is_stay, phash, phash * HASH_P + c),
+        p_b=new_pb,
+        p_nb=new_pnb,
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked decode (the streaming carry) and one-shot search
+# ---------------------------------------------------------------------------
+
+def decode_chunk(state: BeamState, logits, lengths=None, *, blank: int = 0,
+                 semiring: str = "max", impl: str = "jax",
+                 interpret=None, block_b: int = None) -> BeamState:
+    """Advance the beams over a chunk of frames.
+
+    logits: (B, Tc, V) raw (pre-softmax); ``lengths`` (B,) i32 counts
+    TOTAL valid frames from stream start — rows whose ``state.t`` has
+    reached their length are frozen (state and counter), so chunked and
+    one-shot decodes of the same stream are bit-identical.
+    ``impl='pallas'`` routes the per-frame step through the Pallas
+    kernel (``decode/kernel.py``); interpret/block_b as there.
+    """
+    B, Tc, V = logits.shape
+    K = state.p_b.shape[1]
+    U = state.tokens.shape[2]
+    if K > V:
+        raise ValueError(f"beam width {K} exceeds vocab {V}")
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+    if impl == "pallas":
+        from repro.decode.kernel import beam_frame_step
+
+        def step_fn(lp, st):
+            return beam_frame_step(
+                lp, st.p_b, st.p_nb, st.last, st.phash, st.lens,
+                blank=blank, max_len=U, semiring=semiring,
+                block_b=block_b, interpret=interpret)
+    else:
+        def step_fn(lp, st):
+            return frame_step_scores(
+                lp, st.p_b, st.p_nb, st.last, st.phash, st.lens,
+                blank=blank, max_len=U, semiring=semiring)
+
+    def body(st, lp_t):
+        sel, npb, npnb = step_fn(lp_t, st)
+        new = apply_selection(st, sel, npb, npnb, blank=blank, vocab=V)
+        if lengths is None:
+            return new._replace(t=st.t + 1), None
+        valid = st.t < lengths                                   # (B,)
+        v2, v3 = valid[:, None], valid[:, None, None]
+        frozen = BeamState(
+            tokens=jnp.where(v3, new.tokens, st.tokens),
+            lens=jnp.where(v2, new.lens, st.lens),
+            last=jnp.where(v2, new.last, st.last),
+            phash=jnp.where(v2, new.phash, st.phash),
+            p_b=jnp.where(v2, new.p_b, st.p_b),
+            p_nb=jnp.where(v2, new.p_nb, st.p_nb),
+            t=jnp.where(valid, st.t + 1, st.t),
+        )
+        return frozen, None
+
+    state, _ = jax.lax.scan(body, state, jnp.moveaxis(logp, 1, 0))
+    return state
+
+
+def beam_occupancy(state: BeamState):
+    """(B,) fraction of beam slots holding a live prefix (finite score)
+    — the serving/evaluate utilization telemetry (docs/decoding.md)."""
+    tot = jnp.maximum(state.p_b, state.p_nb)
+    return jnp.mean((tot > NEG / 2).astype(jnp.float32), axis=1)
+
+
+def finalize(state: BeamState, *, len_norm: float = 0.0,
+             semiring: str = "max"):
+    """Best hypothesis per row: ``(tokens (B, U) i32 -1-padded,
+    lens (B,), scores (B,))``; ``len_norm`` = a ranks by
+    ``score / max(len, 1)**a``."""
+    U = state.tokens.shape[2]
+    tot = _merge_fn(semiring)(state.p_b, state.p_nb)
+    score = tot
+    if len_norm:
+        score = tot / jnp.maximum(state.lens, 1) ** len_norm
+    best = jnp.argmax(score, axis=1)
+    tokens = jnp.take_along_axis(
+        state.tokens, best[:, None, None], axis=1)[:, 0]
+    lens = jnp.take_along_axis(state.lens, best[:, None], 1)[:, 0]
+    sc = jnp.take_along_axis(score, best[:, None], 1)[:, 0]
+    tokens = jnp.where(jnp.arange(U)[None, :] < lens[:, None], tokens, -1)
+    return tokens, lens, sc
+
+
+def beam_search(logits, lengths=None, *, beam: int = 8, blank: int = 0,
+                semiring: str = "max", len_norm: float = 0.0,
+                max_len: int = None, impl: str = "jax", interpret=None,
+                block_b: int = None):
+    """One-shot batched prefix beam search over (B, T, V) logits.
+
+    Returns ``(tokens (B, U) i32 -1-padded, lens (B,), scores (B,))``.
+    ``beam=1`` with the default max semiring reproduces
+    ``eval.metrics.greedy_ctc_decode`` exactly (module docstring)."""
+    B, T, V = logits.shape
+    U = max_len if max_len is not None else T
+    state = init_state(B, beam, U)
+    state = decode_chunk(state, logits, lengths, blank=blank,
+                         semiring=semiring, impl=impl, interpret=interpret,
+                         block_b=block_b)
+    return finalize(state, len_norm=len_norm, semiring=semiring)
+
+
+def beam_decode(logits, lengths=None, **kw):
+    """:func:`beam_search` with list-of-int-lists output, mirroring
+    ``eval.metrics.greedy_ctc_decode`` for drop-in TER scoring."""
+    import numpy as np
+
+    tokens, lens, _ = beam_search(logits, lengths, **kw)
+    tokens, lens = np.asarray(tokens), np.asarray(lens)
+    return [list(map(int, row[:n])) for row, n in zip(tokens, lens)]

@@ -1,4 +1,5 @@
 from repro.eval.metrics import (  # noqa: F401
+    collapse_labels,
     edit_distance,
     frame_error_rate,
     greedy_ctc_decode,

@@ -1,13 +1,31 @@
-"""Batched serving launcher: continuous-batching decode loop.
+"""Batched serving launcher: continuous-batching decode loops.
 
-A fixed pool of batch slots shares one stacked KV/SSM cache.  Requests are
-admitted into free slots via single-request prefill (cache rows scattered
-into the slot index), then all active slots advance together through the
-jitted one-token ``decode_step``.  Completed slots are freed and refilled —
-the standard continuous-batching pattern, CPU-runnable at reduced scale.
+Two request families share the slot-pool pattern (admit into free slots,
+advance all active slots together, free and refill on completion):
+
+* **LM** (decoder-only families): single-request prefill scatters cache
+  rows into a stacked KV/SSM cache, then the jitted one-token
+  ``decode_step`` advances every active slot.  Under ``--kernel-impl
+  pallas`` the per-wave next-token selection runs through the decode
+  argmax kernel (``repro.decode.kernel.argmax_tokens``, bit-identical
+  to ``jnp.argmax``), so the flag now covers the whole request loop —
+  prefill AND the decode hot path.
+* **ASR** (the paper's lstm family): requests are variable-length
+  utterances; admission runs the BLSTM forward once (``--kernel-impl``
+  selects the fused Pallas stack), and the decode loop streams the
+  CD-state posteriors through the chunked CTC prefix beam search of
+  ``repro.decode`` — one :class:`repro.decode.BeamState` batched over
+  the slot pool IS the decode carry, advanced ``--chunk-frames`` frames
+  per wave (docs/decoding.md).
+
+Both loops print the shared throughput convention of
+``launch/evaluate.py``: decoded tokens/s and occupancy (slot-pool
+occupancy for LM, live-beam-slot fraction for ASR).
 
 PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
     --requests 6 --slots 2 --max-new 16
+PYTHONPATH=src python -m repro.launch.serve --arch swb2000-blstm \
+    --reduced --requests 6 --slots 2 --chunk-frames 8 --beam-width 4
 """
 from __future__ import annotations
 
@@ -18,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import decode as DC
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_local_mesh, rules_for
@@ -43,8 +62,9 @@ def scatter_slot(pool, row, slot):
 class Server:
     def __init__(self, cfg, *, slots: int, max_len: int, seed: int = 0,
                  kernel_impl: str = "jax"):
-        # kernel_impl reaches prefill only: decode_fn is a one-token step
-        # with no pallas variant (tracked in ROADMAP.md open items)
+        # kernel_impl reaches prefill AND the decode loop's token
+        # selection (repro.decode.kernel.argmax_tokens); the decode-
+        # shaped attention kernel remains a ROADMAP.md open item
         assert cfg.supports_decode and cfg.family != "encdec", \
             "demo server covers decoder-only families"
         self.cfg = cfg
@@ -69,6 +89,10 @@ class Server:
         self._jit_decode = jax.jit(
             lambda params, cache, tok, pos: self.model.decode_fn(
                 params, cache, tok, pos))
+        if kernel_impl == "pallas":
+            self._select = lambda row: int(DC.argmax_tokens(row[None])[0])
+        else:
+            self._select = lambda row: int(jnp.argmax(row))
 
     # ------------------------------------------------------------------
     def admit(self, req_id: int, prompt: np.ndarray, max_new: int) -> bool:
@@ -87,7 +111,7 @@ class Server:
         logits, row_cache = self._jit_prefill(
             self.params, {"tokens": jnp.asarray(prompt[None, :])})
         self.cache = scatter_slot(self.cache, row_cache, slot)
-        nxt = int(jnp.argmax(logits[0, -1]))
+        nxt = self._select(logits[0, -1])
         self.pos[slot] = len(prompt)
         self.tokens[slot, 0] = nxt
         self.active[slot] = True
@@ -111,7 +135,7 @@ class Server:
             logits, row = self._jit_decode(self.params, row, tok,
                                            jnp.int32(int(self.pos[slot])))
             self.cache = scatter_slot(self.cache, row, int(slot))
-            nxt = int(jnp.argmax(logits[0, -1]))
+            nxt = self._select(logits[0, -1])
             self.outputs[slot].append(nxt)
             self.tokens[slot, 0] = nxt
             self.pos[slot] += 1
@@ -122,42 +146,189 @@ class Server:
         return done
 
 
+class AsrServer:
+    """Streaming-ASR slot pool for the paper's acoustic model.
+
+    Admission runs the BLSTM forward once over the utterance (masked to
+    its valid frames; ``kernel_impl='pallas'`` selects the fused Pallas
+    stack) and parks the CD-state posteriors host-side.  The decode loop
+    then advances every active slot by ``chunk`` frames per wave through
+    ONE batched :class:`repro.decode.BeamState` — the beam state is the
+    streaming carry, per-slot frame counters freeze exhausted rows, and
+    ``reset_rows`` re-arms a slot on admission.  Completion = all valid
+    frames consumed; the hypothesis is the finalized best beam entry.
+    """
+
+    def __init__(self, cfg, *, slots: int, max_frames: int, chunk: int,
+                 beam: int = 0, seed: int = 0, kernel_impl: str = "jax"):
+        from repro.models import lstm as LS
+
+        self.cfg = cfg
+        self.slots = slots
+        self.max_frames = max_frames
+        self.chunk = chunk
+        self.beam = beam or getattr(cfg, "beam_width", 8)
+        self.semiring = getattr(cfg, "beam_semiring", "max")
+        self.len_norm = getattr(cfg, "beam_len_norm", 0.0)
+        self.impl = "pallas" if kernel_impl == "pallas" else "jax"
+        model = build_model(cfg)
+        self.params = init_spec_tree(model.param_specs(),
+                                     jax.random.PRNGKey(seed))
+        self._jit_fwd = jax.jit(
+            lambda p, feats, n: LS.forward(cfg, p, feats, n,
+                                           kernel_impl=kernel_impl))
+        self.logits = np.zeros((slots, max_frames, cfg.vocab), np.float32)
+        self.lens = np.zeros(slots, np.int32)     # valid frames per slot
+        self.pos = np.zeros(slots, np.int32)      # frames consumed
+        self.active = np.zeros(slots, bool)
+        self.req_ids = [-1] * slots
+        self.state = DC.init_state(slots, self.beam, max_frames)
+        # fixed (state, wave, lens) shapes -> jit once, no per-wave retrace
+        self._jit_decode = jax.jit(
+            lambda st, wave, lens: DC.decode_chunk(
+                st, wave, lens, semiring=self.semiring, impl=self.impl))
+        self._jit_finalize = jax.jit(
+            lambda st: DC.finalize(st, len_norm=self.len_norm,
+                                   semiring=self.semiring))
+        self._jit_occ = jax.jit(DC.beam_occupancy)
+
+    def admit(self, req_id: int, feats: np.ndarray) -> bool:
+        free = np.where(~self.active)[0]
+        if len(free) == 0:
+            return False
+        slot = int(free[0])
+        feats = np.asarray(feats, np.float32)[:self.max_frames]
+        n = len(feats)
+        padded = np.zeros((1, self.max_frames, feats.shape[-1]), np.float32)
+        padded[0, :n] = feats
+        logits = self._jit_fwd(self.params, jnp.asarray(padded),
+                               jnp.asarray([n], jnp.int32))
+        self.logits[slot] = np.asarray(logits[0], np.float32)
+        self.lens[slot] = n
+        self.pos[slot] = 0
+        self.active[slot] = True
+        self.req_ids[slot] = req_id
+        mask = np.zeros(self.slots, bool)
+        mask[slot] = True
+        self.state = DC.reset_rows(self.state, jnp.asarray(mask))
+        return True
+
+    def step(self):
+        """Advance every active slot by one chunk of frames.  Returns
+        ``[(req_id, tokens), ...]`` for slots that finished and
+        the live-beam occupancy of this wave."""
+        C = self.chunk
+        idx = np.minimum(self.pos[:, None] + np.arange(C)[None, :],
+                         self.max_frames - 1)
+        wave = self.logits[np.arange(self.slots)[:, None], idx]
+        # per-row freeze: state.t >= lens stops exhausted/empty rows
+        self.state = self._jit_decode(self.state, jnp.asarray(wave),
+                                      jnp.asarray(self.lens))
+        occ = float(np.mean(np.asarray(
+            self._jit_occ(self.state))[self.active])) \
+            if self.active.any() else 0.0
+        self.pos = np.where(self.active,
+                            np.minimum(self.pos + C, self.lens), self.pos)
+        done = []
+        finished = np.where(self.active & (self.pos >= self.lens))[0]
+        if len(finished):
+            toks, lens, _ = self._jit_finalize(self.state)
+            toks = np.asarray(toks)
+            for slot in finished:
+                hyp = list(map(int, toks[slot][:int(lens[slot])]))
+                done.append((self.req_ids[slot], hyp))
+                self.active[slot] = False
+        return done, occ
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="prompt tokens (LM) / nominal utterance frames "
+                         "(ASR) per request")
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-len", type=int, default=64,
+                    help="cache capacity (LM) / max utterance frames "
+                         "(ASR) per slot")
     ap.add_argument("--kernel-impl", default="jax",
                     choices=["jax", "pallas"],
-                    help="kernel implementation for PREFILL only; the "
-                         "one-token decode loop has no pallas path yet "
-                         "and always runs the jax kernels")
+                    help="kernels for prefill/the BLSTM forward AND the "
+                         "decode loop (LM: argmax selection kernel; ASR: "
+                         "the prefix-beam inner-step kernel)")
+    ap.add_argument("--chunk-frames", type=int, default=8,
+                    help="ASR mode: frames decoded per wave (the "
+                         "streaming chunk of the beam-state carry)")
+    ap.add_argument("--beam-width", type=int, default=0,
+                    help="ASR mode: CTC prefix-beam width (0 = cfg "
+                         "beam_width)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if cfg.family == "lstm":
+        return _main_asr(cfg, args)
+
     rng = np.random.default_rng(0)
     server = Server(cfg, slots=args.slots, max_len=args.max_len,
                     kernel_impl=args.kernel_impl)
     pending = [(i, rng.integers(0, cfg.vocab, size=args.prompt_len))
                for i in range(args.requests)]
-    finished, t0, steps = [], time.time(), 0
+    finished, t0, steps, occ = [], time.time(), 0, 0.0
     while pending or server.active.any():
         while pending and server.admit(pending[0][0], pending[0][1],
                                        args.max_new):
             print(f"admitted request {pending[0][0]}")
             pending.pop(0)
+        occ += server.active.mean()
         finished += server.step()
         steps += 1
     dt = time.time() - t0
     toks = sum(len(o) for _, o in finished)
+    # decoded tokens/s + occupancy: the shared throughput convention of
+    # launch/evaluate.py (occupancy = slot-pool utilization per wave)
     print(f"served {len(finished)} requests, {toks} tokens, "
-          f"{steps} decode waves in {dt:.1f}s ({toks/dt:.1f} tok/s)")
+          f"{steps} decode waves in {dt:.1f}s ({toks/dt:.1f} tok/s, "
+          f"occupancy {occ/max(steps, 1):.2f})")
+    for rid, out in finished:
+        print(f"  req {rid}: {out[:8]}{'...' if len(out) > 8 else ''}")
+
+
+def _main_asr(cfg, args):
+    """Streaming-ASR serving: variable-length synthetic utterances from
+    the data pipeline's length distribution, chunked beam decode."""
+    from repro.data import make_dataset
+
+    seq_len = min(args.prompt_len, args.max_len)
+    ds = make_dataset(cfg, seq_len=seq_len, batch=max(args.requests, 1),
+                      seed=0, var_len=True)
+    batch = ds.batch_at(0)
+    pending = [(i, batch["features"][i, :batch["lengths"][i]])
+               for i in range(args.requests)]
+    server = AsrServer(cfg, slots=args.slots, max_frames=args.max_len,
+                       chunk=args.chunk_frames, beam=args.beam_width,
+                       kernel_impl=args.kernel_impl)
+    finished, t0, steps, occ = [], time.time(), 0, 0.0
+    frames = sum(len(f) for _, f in pending)
+    while pending or server.active.any():
+        while pending and server.admit(pending[0][0], pending[0][1]):
+            print(f"admitted request {pending[0][0]} "
+                  f"({len(pending[0][1])} frames)")
+            pending.pop(0)
+        done, wave_occ = server.step()
+        finished += done
+        occ += wave_occ
+        steps += 1
+    dt = time.time() - t0
+    toks = sum(len(o) for _, o in finished)
+    print(f"served {len(finished)} requests, {toks} tokens, "
+          f"{steps} decode waves in {dt:.1f}s ({toks/dt:.1f} tok/s, "
+          f"{frames/dt:.1f} frames/s, beam {server.beam} "
+          f"occupancy {occ/max(steps, 1):.2f})")
     for rid, out in finished:
         print(f"  req {rid}: {out[:8]}{'...' if len(out) > 8 else ''}")
 

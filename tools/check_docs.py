@@ -8,9 +8,9 @@ Three checks, all against the working tree:
    in a tracked *.md file must resolve to an existing file/directory
    (anchors are stripped; external schemes are ignored).
 2. **README flag reference** — every argparse flag defined in
-   `src/repro/launch/train.py` and `src/repro/launch/serve.py` must
-   appear in README.md, so the CLI surface and its documentation cannot
-   drift apart.
+   `src/repro/launch/train.py`, `src/repro/launch/serve.py` and
+   `src/repro/launch/evaluate.py` must appear in README.md, so the CLI
+   surface and its documentation cannot drift apart.
 3. **README config-knob reference** — every `ArchConfig` field of
    `src/repro/configs/base.py` must be mentioned in README.md (as
    `` `name` ``), so new config knobs cannot land undocumented.
@@ -33,7 +33,8 @@ _FLAG = re.compile(r"add_argument\(\s*\"(--[A-Za-z0-9-]+)\"")
 
 _EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
 
-FLAG_SOURCES = ("src/repro/launch/train.py", "src/repro/launch/serve.py")
+FLAG_SOURCES = ("src/repro/launch/train.py", "src/repro/launch/serve.py",
+                "src/repro/launch/evaluate.py")
 
 
 def iter_markdown(root: Path):
