@@ -100,6 +100,129 @@ def simulate_hring(spec: ClusterSpec, n_batches: int, gpus_per_node: int,
 
 
 # ---------------------------------------------------------------------------
+# Fault-plan driven simulation (pod-scale N; docs/fault_tolerance.md)
+# ---------------------------------------------------------------------------
+#
+# The ``plan`` argument is duck-typed against repro.core.faults.FaultPlan
+# (speed_factors / stall_extra / active_at / departures) so perfsim stays
+# importable without the repro package on the path — the SAME plan object
+# that drives the elastic train step drives the wall-clock simulation,
+# making the `--only faults` bench's convergence and throughput columns
+# two views of one fault description.
+
+
+def _nominal_round(spec: ClusterSpec, comm: float) -> float:
+    return float(np.median(spec.t_comp)) + comm
+
+
+def simulate_sync_faulty(spec: ClusterSpec, n_batches: int, plan, *,
+                         neighbor_only: bool = False,
+                         elastic: bool = False):
+    """Barrier-per-step under a fault plan.
+
+    Non-elastic (the gang-scheduled baseline): every round waits for the
+    SLOWEST member — a 4× straggler stretches every round 4×, a stall
+    blocks the whole job, and a crashed learner halts it outright until
+    the rejoin (its downtime, measured in nominal rounds, is charged as
+    dead wall-clock).  A departure that never rejoins deadlocks the job:
+    makespan = inf.
+
+    Elastic: the barrier spans only the live set — survivors keep
+    stepping (each round consumes one batch per live learner), stalls
+    and straggler factors only stretch the rounds their victims attend.
+
+    Returns (makespan_seconds, per-learner batch counts).
+    """
+    L = spec.n_learners
+    speed = plan.speed_factors()
+    comm = spec.t_neighbor() if neighbor_only else spec.t_allreduce()
+    nominal = _nominal_round(spec, comm)
+
+    if not elastic:
+        for d in getattr(plan, "departures", ()):
+            if d.rejoin < 0:
+                return float("inf"), np.zeros(L, np.int64)
+
+    t = 0.0
+    counts = np.zeros(L, np.int64)
+    done = 0
+    r = 0
+    charged = set()
+    while done < n_batches:
+        active = plan.active_at(r)
+        members = active if elastic else np.ones(L, bool)
+        if not elastic:
+            # the gang blocks for every crashed member's downtime (its
+            # wall-clock absence, in nominal rounds), charged once
+            for d in getattr(plan, "departures", ()):
+                if d.step == r and d.learner not in charged:
+                    charged.add(d.learner)
+                    t += (d.rejoin - d.step) * nominal
+        per = [spec.t_comp[i] * speed[i]
+               * (1.0 + plan.stall_extra(i, r))
+               for i in range(L) if members[i]]
+        t += max(per) + comm
+        counts[members] += 1
+        done += int(members.sum())
+        r += 1
+    return t, counts
+
+
+def simulate_async_faulty(spec: ClusterSpec, n_batches: int, plan):
+    """AD-PSGD-style event loop under a fault plan: each learner cycles
+    at max(its own compute × its speed factor (+ heavy-tailed stalls),
+    neighbor exchange); a crashed learner simply produces nothing during
+    [crash, rejoin) while the rest keep going — the elastic-membership
+    wall-clock model.  Crash/rejoin steps are mapped to wall-clock via
+    the nominal round time.  Returns (makespan, per-learner counts)."""
+    L = spec.n_learners
+    speed = plan.speed_factors()
+    t_comm = spec.t_neighbor()
+    nominal = _nominal_round(spec, t_comm)
+    windows = {}   # learner -> (t_crash, t_rejoin)
+    for d in getattr(plan, "departures", ()):
+        t_back = d.rejoin * nominal if d.rejoin >= 0 else float("inf")
+        windows[d.learner] = (d.step * nominal, t_back)
+
+    def cycle(i: int, k: int) -> float:
+        comp = spec.t_comp[i] * speed[i] * (1.0 + plan.stall_extra(i, k))
+        return max(comp, t_comm)
+
+    heap = []
+    for i in range(L):
+        start = 0.0
+        if i in windows and windows[i][0] <= 0.0:
+            start = windows[i][1]
+        if np.isfinite(start):
+            heapq.heappush(heap, (start + cycle(i, 0), i, 0))
+    counts = np.zeros(L, np.int64)
+    t = 0.0
+    while counts.sum() < n_batches and heap:
+        t, i, k = heapq.heappop(heap)
+        if i in windows:
+            crash, back = windows[i]
+            if crash <= t < back:
+                # the batch finished into the crash window: lost; the
+                # learner resumes (rejoined, consensus-reseeded) at
+                # `back`
+                if np.isfinite(back):
+                    heapq.heappush(heap, (back + cycle(i, k + 1), i, k + 1))
+                continue
+        counts[i] += 1
+        heapq.heappush(heap, (t + cycle(i, k + 1), i, k + 1))
+    return t, counts
+
+
+def straggler_spec(n: int, t_comp_base: float, model_bytes: float,
+                   link_bw: float = 50e9) -> ClusterSpec:
+    """ClusterSpec for N learners whose nominal per-batch time is
+    ``t_comp_base`` — straggler factors come from the plan at
+    simulation time, so the same spec serves clean and faulty runs."""
+    return ClusterSpec(n, np.full(n, t_comp_base), model_bytes,
+                       link_bw=link_bw)
+
+
+# ---------------------------------------------------------------------------
 # calibration from the repo's own artifacts
 # ---------------------------------------------------------------------------
 

@@ -2,7 +2,27 @@
 
 Layout:  <dir>/step_<n>/tree.msgpack (structure + small leaves metadata)
          <dir>/step_<n>/arrays.npz   (tensor payloads)
-Writes are atomic (tmp dir + rename); ``keep`` bounds retained steps.
+
+This module is the durability half of the crash-recovery contract
+(docs/fault_tolerance.md):
+
+* **Atomic saves** — payloads are written to a temp directory, fsynced
+  (files AND directories, so the rename itself is durable), then
+  renamed into place.  A crash mid-save can never leave a corrupt
+  ``step_<n>``: either the old state survives or the new one is
+  complete.  Old steps beyond ``keep`` are pruned only AFTER the new
+  one is durable.
+* **Validated restores** — :func:`restore` checks the saved tree
+  structure, every leaf's shape, and every leaf's dtype against
+  ``state_like`` and raises a :class:`ValueError` naming the mismatched
+  leaf path (``jax.tree_util.keystr``), instead of silently
+  mis-restoring into the wrong slot.
+* **Bit-exact round-trips** — leaves are stored as raw numpy (bf16
+  viewed as uint16, since npz cannot hold bfloat16), so a save→restore
+  of optimizer state, ``state['comm']`` error-feedback residuals, and
+  bf16 params reproduces every bit; together with the data pipeline
+  being a pure function of (seed, step), a killed-and-resumed run
+  matches an uninterrupted one step-for-step.
 """
 from __future__ import annotations
 
@@ -19,7 +39,38 @@ def _flatten(state):
     return leaves, treedef
 
 
+def _fsync_file(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str):
+    # directory fsync makes the contained names durable; not every
+    # filesystem supports opening a directory O_RDONLY for fsync —
+    # degrade gracefully rather than fail the save
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(directory: str, step: int, state, *, keep: int = 3) -> str:
+    """Atomically persist ``state`` as ``<directory>/step_<step>``.
+
+    Write order (the crash-safety argument): temp dir → payload files →
+    fsync payload files → fsync temp dir → rename → fsync parent dir →
+    prune.  At no point does an incomplete ``step_<n>`` exist under its
+    final name, and pruning of the ``keep`` newest-but-N steps only
+    happens after the new step is durable on disk."""
     os.makedirs(directory, exist_ok=True)
     leaves, treedef = _flatten(state)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
@@ -35,18 +86,26 @@ def save(directory: str, step: int, state, *, keep: int = 3) -> str:
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    with open(os.path.join(tmp, "tree.msgpack"), "wb") as f:
+    tree_path = os.path.join(tmp, "tree.msgpack")
+    with open(tree_path, "wb") as f:
         f.write(msgpack.packb(meta))
+        f.flush()
+        os.fsync(f.fileno())
     # npz can't hold bfloat16 — view as uint16 and restore from dtype meta
     packed = {
         k: (a.view(np.uint16) if a.dtype.name == "bfloat16" else a)
         for k, a in arrays.items()
     }
-    np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    np.savez(arrays_path, **packed)
+    _fsync_file(arrays_path)
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_dir(directory)
 
+    # the new step is durable — only now retire the oldest beyond `keep`
     steps = sorted(latest_steps(directory))
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
@@ -66,7 +125,13 @@ def latest_step(directory: str):
 
 
 def restore(directory: str, state_like, step: int = None):
-    """Restore into the structure of ``state_like`` (shape/dtype checked)."""
+    """Restore into the structure of ``state_like``.
+
+    The saved tree structure and every leaf's shape/dtype are validated
+    against ``state_like``; a mismatch raises a ValueError naming the
+    offending leaf path, the expected and the found shape/dtype — a
+    checkpoint from a different strategy/config/learner count fails
+    loudly instead of silently mis-restoring."""
     import jax.numpy as jnp
 
     step = step if step is not None else latest_step(directory)
@@ -76,15 +141,39 @@ def restore(directory: str, state_like, step: int = None):
     with open(os.path.join(path, "tree.msgpack"), "rb") as f:
         meta = msgpack.unpackb(f.read())
     data = np.load(os.path.join(path, "arrays.npz"))
-    leaves, treedef = _flatten(state_like)
-    assert meta["n_leaves"] == len(leaves), "tree structure mismatch"
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        state_like)
+    if meta["treedef"] != str(treedef):
+        raise ValueError(
+            f"checkpoint {path} tree structure mismatch:\n"
+            f"  saved:    {meta['treedef']}\n"
+            f"  expected: {treedef}\n"
+            f"(different strategy/optimizer/transport than the saved "
+            f"run? state keys like 'prev_params'/'anchor'/'comm' are "
+            f"strategy-dependent)")
+    if meta["n_leaves"] != len(paths_and_leaves):
+        raise ValueError(
+            f"checkpoint {path} has {meta['n_leaves']} leaves, state "
+            f"expects {len(paths_and_leaves)}")
     out = []
-    for i, ref in enumerate(leaves):
+    for i, (leaf_path, ref) in enumerate(paths_and_leaves):
         a = data[f"leaf_{i}"]
         dt = meta["dtypes"][i]
         if dt == "bfloat16":
             a = a.view(jnp.bfloat16)
-        expect = tuple(np.shape(ref))
-        assert tuple(a.shape) == expect, (i, a.shape, expect)
+        name = jax.tree_util.keystr(leaf_path)
+        expect_shape = tuple(np.shape(ref))
+        if tuple(a.shape) != expect_shape:
+            raise ValueError(
+                f"checkpoint {path} leaf {name!r}: saved shape "
+                f"{tuple(a.shape)} != expected {expect_shape} "
+                f"(learner count or architecture changed since the "
+                f"save?)")
+        expect_dtype = str(jnp.asarray(ref).dtype) \
+            if not hasattr(ref, "dtype") else str(ref.dtype)
+        if str(a.dtype) != expect_dtype:
+            raise ValueError(
+                f"checkpoint {path} leaf {name!r}: saved dtype "
+                f"{a.dtype} != expected {expect_dtype}")
         out.append(jnp.asarray(a))
     return jax.tree.unflatten(treedef, out), step

@@ -131,6 +131,11 @@ class ArchConfig:
     comm_pod_size: int = 1
     # topk wire: fraction of entries shipped per bucket
     comm_topk_frac: float = 0.01
+    # elastic (fault-tolerant) mixing only: staleness damping λ — a
+    # learner whose params are s steps behind mixes with confidence
+    # 1/(1 + λ·s) (mixing.staleness_damped; docs/fault_tolerance.md).
+    # 0 disables damping; ignored outside --fault-* runs.
+    comm_staleness_lambda: float = 0.0
 
     # ---- CTC decode / recognition quality (repro/decode;
     # docs/decoding.md; --beam-* flags of evaluate.py and serve.py) ----

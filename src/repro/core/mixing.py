@@ -182,6 +182,169 @@ def make_exp_mixer(n_learners: int):
     return mix
 
 
+# ---------------------------------------------------------------------------
+# Elastic matrices: the same topologies over a live subset of learners
+# ---------------------------------------------------------------------------
+#
+# Under elastic membership (learners crash, rejoin, straggle — see
+# ``repro.core.faults`` and docs/fault_tolerance.md) the mixing matrix is
+# rebuilt every step for the ACTIVE set: dead learners become identity
+# rows (their replica is frozen bit-for-bit until they rejoin) and the
+# survivors re-form the topology among themselves by consecutive rank.
+# Everything below is jnp on a traced (L,) activity mask, so the jitted
+# elastic train step compiles ONCE for the whole run regardless of the
+# fault schedule.
+#
+# All constructors return symmetric doubly-stochastic matrices (the
+# hierarchical one to a documented tolerance under ragged pod survivor
+# counts), so the Eq. 14 analysis — and exact consensus-mean
+# preservation — carries over unchanged.
+
+
+def _elastic_hop_matrix(active, hop, *, exp_weights: bool = False):
+    """Gossip-at-hop-``hop`` over the active learners, by consecutive
+    rank: active learner of rank i exchanges with ranks i±hop (mod the
+    live count).  ``exp_weights=False`` gives ring thirds (matches
+    :func:`ring_matrix` exactly for every live count, including the
+    L=2 [2/3, 1/3] degenerate case); ``exp_weights=True`` gives the
+    one-peer exponential-graph weights (1/2 self, 1/4 each direction,
+    collapsing to exact pairwise averaging when hop = n/2)."""
+    a = jnp.asarray(active, jnp.float32)
+    L = a.shape[0]
+    n = jnp.maximum(jnp.sum(a), 1.0)
+    rank = jnp.cumsum(a) - 1.0
+    d = jnp.mod(rank[:, None] - rank[None, :], n)
+    hop = jnp.asarray(hop, jnp.float32)
+    hit_f = (d == jnp.mod(hop, n)).astype(jnp.float32)
+    hit_b = (d == jnp.mod(n - hop, n)).astype(jnp.float32)
+    pair = a[:, None] * a[None, :] * (1.0 - jnp.eye(L))
+    if exp_weights:
+        off = pair * 0.25 * (hit_f + hit_b)
+    else:
+        off = pair * (1.0 / 3.0) * jnp.maximum(hit_f, hit_b)
+    diag = a * (1.0 - jnp.sum(off, axis=1)) + (1.0 - a)
+    return off + jnp.diag(diag)
+
+
+def elastic_ring_matrix(active):
+    """T_1 over the live set: ring thirds among survivors by consecutive
+    rank, identity for the dead.  All-active reproduces
+    :func:`ring_matrix` exactly."""
+    return _elastic_hop_matrix(active, 1.0)
+
+
+def elastic_exp_matrix(active, step):
+    """Time-varying exponential-graph gossip over the live set: at step k
+    each survivor exchanges at hop 2^(k mod ceil(log2 n)).  Symmetrized
+    (both directions at 1/4) so staleness damping and edge drops keep it
+    doubly stochastic; a power-of-2 live count still reaches exact
+    consensus every log2(n) rounds (each round with hop n/2 is exact
+    pairwise averaging)."""
+    a = jnp.asarray(active, jnp.float32)
+    n = jnp.maximum(jnp.sum(a), 1.0)
+    m = jnp.maximum(jnp.ceil(jnp.log2(n)), 1.0)
+    hop = jnp.round(2.0 ** jnp.mod(jnp.asarray(step, jnp.float32), m))
+    return _elastic_hop_matrix(active, hop, exp_weights=True)
+
+
+def elastic_uniform_matrix(active):
+    """T_u over the live set: global averaging among survivors, identity
+    for the dead."""
+    a = jnp.asarray(active, jnp.float32)
+    n = jnp.maximum(jnp.sum(a), 1.0)
+    return a[:, None] * a[None, :] / n + jnp.diag(1.0 - a)
+
+
+def elastic_hierarchical_matrix(active, pod_size: int, *, sinkhorn: int = 30):
+    """Hierarchical mixing over the live set: uniform averaging among
+    each pod's survivors, ring mixing across pods that still have any,
+    identity for the dead (and for fully-dead pods).
+
+    With ragged survivor counts the raw intra∘inter composition is only
+    row-stochastic (a small pod's members weigh more in the pod mean than
+    a large pod's), so the matrix is symmetrized and re-balanced with a
+    few symmetric Sinkhorn sweeps — doubly stochastic to ~1e-6 in
+    practice, and EXACTLY kron(ring, uniform) when every pod has the
+    same survivor count (in particular the all-active case)."""
+    a = jnp.asarray(active, jnp.float32)
+    L = a.shape[0]
+    if L % pod_size:
+        raise ValueError(f"pod_size {pod_size} must divide L={L}")
+    pods = L // pod_size
+    ap = a.reshape(pods, pod_size)
+    pod_n = jnp.sum(ap, axis=1)                      # survivors per pod
+    pod_alive = (pod_n > 0).astype(jnp.float32)
+    Tp = _elastic_hop_matrix(pod_alive, 1.0)         # ring over live pods
+    # lift to learners: i in pod P, j in pod Q gets Tp[P,Q] * a_j/n_Q
+    share = a / jnp.maximum(jnp.repeat(pod_n, pod_size), 1.0)
+    lift = jnp.repeat(jnp.repeat(Tp, pod_size, 0), pod_size, 1)
+    R = a[:, None] * lift * share[None, :] \
+        + jnp.diag(1.0 - a)
+    S = 0.5 * (R + R.T)
+    for _ in range(sinkhorn):
+        s = jnp.sum(S, axis=1)
+        inv = jax.lax.rsqrt(jnp.maximum(s, 1e-12))
+        S = S * inv[:, None] * inv[None, :]
+    return S
+
+
+def staleness_damped(T, staleness, lam):
+    """Down-weight stale learners' cross influence: with per-learner
+    staleness s (steps since the learner last contributed a gradient)
+    and damping λ, each learner gets confidence c_i = 1/(1 + λ·s_i) and
+    the off-diagonal becomes T_ij·c_i·c_j, the freed mass returning to
+    the diagonal.  Symmetric elementwise rescaling of a symmetric T
+    keeps it doubly stochastic — a fresh learner neither absorbs a stale
+    peer's lagged params nor leaks weight through it, while λ = 0 (or a
+    fully-fresh cluster) is the identity transform."""
+    T = jnp.asarray(T, jnp.float32)
+    c = 1.0 / (1.0 + lam * jnp.asarray(staleness, jnp.float32))
+    off = T * c[:, None] * c[None, :]
+    off = off - jnp.diag(jnp.diag(off))
+    diag = 1.0 - jnp.sum(off, axis=1)
+    return off + jnp.diag(diag)
+
+
+def edge_masked(T, edge_ok):
+    """Drop gossip edges: zero the masked off-diagonal entries (the mask
+    is symmetric — an undirected link either delivers or doesn't) and
+    return the freed mass to the diagonal, preserving double
+    stochasticity.  Both endpoints of a dropped edge fall back toward
+    themselves, exactly like a timed-out peer exchange."""
+    T = jnp.asarray(T, jnp.float32)
+    off = T * jnp.asarray(edge_ok, jnp.float32)
+    off = off - jnp.diag(jnp.diag(off))
+    diag = 1.0 - jnp.sum(off, axis=1)
+    return off + jnp.diag(diag)
+
+
+def elastic_matrix(active, topology: str, *, step=0, pod_size: int = 1,
+                   staleness=None, staleness_lambda: float = 0.0,
+                   edge_ok=None):
+    """One elastic mixing matrix: ``topology`` over the live set, then
+    dropped-edge masking, then staleness damping (docs/fault_tolerance.md
+    has the full semantics).  ``active``/``staleness``/``edge_ok``/
+    ``step`` may all be traced — the result is jit-stable."""
+    if topology == "none":
+        T = jnp.eye(jnp.asarray(active).shape[0], dtype=jnp.float32)
+    elif topology == "ring":
+        T = elastic_ring_matrix(active)
+    elif topology == "uniform":
+        T = elastic_uniform_matrix(active)
+    elif topology == "exp":
+        T = elastic_exp_matrix(active, step)
+    elif topology == "hierarchical":
+        T = elastic_hierarchical_matrix(active, pod_size)
+    else:
+        raise ValueError(f"unknown topology {topology!r} for elastic "
+                         f"mixing")
+    if edge_ok is not None:
+        T = edge_masked(T, edge_ok)
+    if staleness is not None and staleness_lambda > 0.0:
+        T = staleness_damped(T, staleness, staleness_lambda)
+    return T
+
+
 def mix_matrix(params, T):
     """General doubly-stochastic mixing (research/analysis path)."""
     Tj = jnp.asarray(T, jnp.float32)

@@ -66,6 +66,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.transport import Transport
 from repro.optim.optimizers import Optimizer
@@ -79,7 +80,14 @@ def split_learner_batch(batch, n_learners: int):
     """(B, ...) -> (L, B/L, ...) on every input leaf.
 
     Raises a ValueError (not a silent misshape) when the global batch is
-    not divisible by the learner count."""
+    not divisible by the learner count, or when the learner count itself
+    is empty (the all-inactive edge — see :func:`check_active`)."""
+    if n_learners < 1:
+        raise ValueError(
+            f"n_learners={n_learners}: cannot split a batch over an "
+            f"empty learner set — at least one learner must be active "
+            f"(see check_active / FaultPlan membership validation)")
+
     def one(path, x):
         B = x.shape[0]
         if B % n_learners != 0:
@@ -93,6 +101,24 @@ def split_learner_batch(batch, n_learners: int):
         return x.reshape(n_learners, B // n_learners, *x.shape[1:])
 
     return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def check_active(active) -> int:
+    """Host-side guard for the all-inactive-learner edge: frame-weighted
+    aggregation over an empty learner set is 0/0, and the jitted step
+    only *clamps* the denominator (traced values cannot raise).  Call
+    this on the step's activity mask before invoking the elastic step;
+    returns the live count.  ``repro.core.faults.FaultPlan`` applies the
+    same rule to every membership event at plan construction."""
+    n = int(np.asarray(active).sum())
+    if n <= 0:
+        raise ValueError(
+            "no active learners this step: frame-weighted aggregation "
+            "over an empty learner set is 0/0 and mixing has no "
+            "survivor to freeze toward — fix the fault plan so at least "
+            "one learner stays alive (FaultPlan raises the same error "
+            "at construction)")
+    return n
 
 
 def _valid_frames(batch):
@@ -220,6 +246,7 @@ def transport_from_cfg(cfg, strategy: Strategy) -> Transport:
         bucket_bytes=int(getattr(cfg, "comm_bucket_mb", 0) * 2 ** 20),
         pod_size=getattr(cfg, "comm_pod_size", 1) or 1,
         topk_frac=getattr(cfg, "comm_topk_frac", 0.01),
+        staleness_lambda=getattr(cfg, "comm_staleness_lambda", 0.0),
     )
 
 
@@ -387,6 +414,239 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
             out["prev_params"] = state["params"]
         if with_consensus:
             metrics["consensus"] = consensus_distance(out["params"])
+        return out, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Elastic (fault-tolerant) train step
+# ---------------------------------------------------------------------------
+
+def _sel(mask, a, b):
+    """Per-learner select over stacked trees: leaf rows where the (L,)
+    ``mask`` is set come from ``a``, the rest from ``b``."""
+    def one(x, y):
+        m = (mask > 0).reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+    return jax.tree.map(one, a, b)
+
+
+def _reseed_rejoiners(params, rejoin, incumbent):
+    """Rejoining learners re-enter at the incumbents' consensus mean —
+    elastic membership never resurrects a crashed learner's dead weights
+    (docs/fault_tolerance.md)."""
+    n_inc = jnp.maximum(jnp.sum(incumbent), 1.0)
+
+    def one(w):
+        wf = w.astype(jnp.float32)
+        inc = incumbent.reshape((-1,) + (1,) * (w.ndim - 1))
+        mu = jnp.sum(wf * inc, axis=0, keepdims=True) / n_inc
+        rj = (rejoin > 0).reshape((-1,) + (1,) * (w.ndim - 1))
+        return jnp.where(rj, mu, wf).astype(w.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def _masked_consensus(params, active):
+    """Consensus distance over the ACTIVE learners only (a crashed
+    learner's frozen replica is cluster weather, not disagreement)."""
+    n_act = jnp.maximum(jnp.sum(active), 1.0)
+
+    def one(w):
+        if w.ndim == 0 or w.shape[0] == 1:
+            return jnp.float32(0.0), jnp.float32(1.0)
+        wf = w.astype(jnp.float32)
+        a = active.reshape((-1,) + (1,) * (w.ndim - 1))
+        mu = jnp.sum(wf * a, axis=0, keepdims=True) / n_act
+        per = jnp.float32(wf.size) / wf.shape[0]
+        return jnp.sum(jnp.square(wf - mu) * a), n_act * per
+
+    parts = [one(w) for w in jax.tree.leaves(params)]
+    num = sum(p[0] for p in parts)
+    den = sum(p[1] for p in parts)
+    return jnp.sqrt(num / den)
+
+
+def init_elastic_state(strategy: Strategy, params, optimizer: Optimizer,
+                       transport: Optional[Transport] = None):
+    """:func:`init_state` plus the per-learner staleness counters (steps
+    since the learner last contributed a gradient) that drive
+    staleness-aware mixing weights."""
+    state = init_state(strategy, params, optimizer, transport)
+    state["staleness"] = jnp.zeros((_learner_dim(params),), jnp.int32)
+    return state
+
+
+def make_elastic_train_step(strategy: Strategy, loss_fn: Callable,
+                            optimizer: Optimizer, lr_schedule: Callable,
+                            *, n_learners: int, microbatches: int = 1,
+                            with_consensus: bool = False,
+                            pre_split: bool = False,
+                            transport: Optional[Transport] = None,
+                            fault_seed: int = 0,
+                            with_corruption: bool = False):
+    """Build the fault-tolerant variant of :func:`make_train_step`:
+
+        ``step(state, batch, faults) -> (state', metrics)``
+
+    where ``faults`` is one :meth:`repro.core.faults.FaultPlan.
+    step_inputs` dict (active/contrib/rejoin/edge_ok/corrupt arrays, all
+    traced — ONE jit compile covers any fault schedule).  Semantics
+    (normative text in docs/fault_tolerance.md):
+
+    * **membership** — mixing runs over the live set via the elastic
+      matrices (dead learners frozen bit-for-bit as identity rows);
+      rejoiners re-enter at the incumbents' consensus mean with a fresh
+      optimizer state and zero staleness.
+    * **stragglers/stalls** — a learner that is alive but not
+      contributing (``contrib`` = 0) still participates in mixing but
+      applies no gradient and keeps its optimizer state; its staleness
+      counter grows, and with ``transport.staleness_lambda`` > 0 its
+      mixing influence is damped by 1/(1 + λ·staleness).
+    * **aggregation** — frame weights renormalize over the contributing
+      learners: w_l = n_active·f_l/Σ_contrib f, so the mean applied
+      gradient equals the global masked gradient over contributors, and
+      the reported loss is the contributor frame-weighted mean.  The
+      all-inactive edge is clamped in-graph and rejected host-side
+      (:func:`check_active`, FaultPlan validation).
+    * **wire faults** — dropped edges return their mixing mass to the
+      diagonal; corrupted payloads (``with_corruption``) only poison
+      the peer view, never the local replica.
+
+    With the trivial mask (everyone active and contributing, no drops)
+    the trajectory matches :func:`make_train_step` to f32 matmul
+    tolerance — the elastic path mixes via an explicit matrix
+    contraction where the plain path uses rolls/means.
+
+    Only replicated strategies can be elastic (non-replicated sc_psgd
+    has no learner axis to mask — use ``sc_psgd_replicated``).
+    Difference-coded wires (topk) are rejected by
+    :meth:`Transport.make_elastic_mixer`.
+    """
+    if not strategy.replicated:
+        raise ValueError(
+            f"strategy {strategy.name!r} is not replicated: elastic "
+            f"membership needs a stacked learner axis to mask — use "
+            f"'sc_psgd_replicated' for an elastic allreduce baseline")
+    transport = transport if transport is not None \
+        else default_transport(strategy)
+    mix = transport.make_elastic_mixer(
+        n_learners, fault_seed=fault_seed, with_corruption=with_corruption)
+
+    def grad_one(params, batch):
+        return _accumulated_grad(loss_fn, params, batch, microbatches)
+
+    def step(state, batch, faults):
+        lr = lr_schedule(state["step"])
+        metrics = {}
+        active = faults["active"]
+        rejoin = faults["rejoin"]
+        gmask = active * faults["contrib"]
+        n_act = jnp.maximum(jnp.sum(active), 1.0)
+        incumbent = active * (1.0 - rejoin)
+
+        # membership first: rejoiners re-enter at the incumbents' mean
+        params = _reseed_rejoiners(state["params"], rejoin, incumbent)
+        fresh_opt = jax.vmap(optimizer.init)(params)
+        opt = _sel(rejoin, fresh_opt, state["opt"])
+        staleness = jnp.where(rejoin > 0, 0, state["staleness"])
+
+        lbatch = batch if pre_split else split_learner_batch(batch, n_learners)
+        grad_at = params
+        prev = None
+        if strategy.stale:
+            prev = _reseed_rejoiners(state["prev_params"], rejoin, incumbent)
+            grad_at = prev
+        loss_l, g_l = jax.vmap(grad_one)(grad_at, lbatch)
+
+        if isinstance(lbatch, dict) and "lengths" in lbatch:
+            frames = jnp.sum(lbatch["lengths"].astype(jnp.float32),
+                             axis=tuple(range(1, lbatch["lengths"].ndim)))
+        else:
+            frames = jnp.ones((n_learners,), jnp.float32)
+        cframes = gmask * frames
+        csum = jnp.maximum(jnp.sum(cframes), 1e-6)
+        # mean-over-active of the applied gradients == the global masked
+        # gradient over the contributors (all-contributing rectangular
+        # batches give w == 1, the plain-path convention)
+        w = n_act * cframes / csum
+        g_l = jax.tree.map(
+            lambda g: (g.astype(jnp.float32)
+                       * w.reshape((-1,) + (1,) * (g.ndim - 1))
+                       ).astype(g.dtype), g_l)
+        metrics["loss"] = jnp.sum(loss_l * cframes) / csum
+
+        wire_bytes = (jnp.float32(transport.wire_bytes(params))
+                      * n_act / n_learners)
+
+        def elastic_mix(p, step_no):
+            return mix(p, step_no, active, staleness,
+                       faults["edge_ok"], faults["corrupt"])
+
+        if strategy.block_size:
+            # elastic BMUF: gated local SGD inside the block; at block
+            # boundaries the survivors sync through the elastic matrix
+            # while the dead keep params/anchor/momentum frozen
+            anchor = _reseed_rejoiners(state["anchor"], rejoin, incumbent)
+            mom = _sel(rejoin,
+                       jax.tree.map(lambda m: jnp.zeros_like(m),
+                                    state["block_mom"]),
+                       state["block_mom"])
+            upd_params, new_opt = jax.vmap(
+                optimizer.update, in_axes=(0, 0, 0, None)
+            )(g_l, opt, params, lr)
+            upd_params = _sel(gmask, upd_params, params)
+            new_opt = _sel(gmask, new_opt, opt)
+            step_no = state["step"] + 1
+            is_sync = (step_no % strategy.block_size) == 0
+
+            def do_sync(args):
+                p, anchor, mom = args
+                avg = elastic_mix(p, step_no)
+                delta = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  - b.astype(jnp.float32)), avg, anchor)
+                new_mom = jax.tree.map(
+                    lambda m, d: strategy.block_momentum * m
+                    + strategy.block_lr * d, mom, delta)
+                new = jax.tree.map(
+                    lambda b, m: (b.astype(jnp.float32) + m).astype(b.dtype),
+                    anchor, new_mom)
+                return (_sel(active, new, p), _sel(active, new, anchor),
+                        _sel(active, new_mom, mom))
+
+            new_params, anchor, mom = jax.lax.cond(
+                is_sync, do_sync, lambda args: args,
+                (upd_params, anchor, mom))
+            out = {"params": new_params, "opt": new_opt, "step": step_no,
+                   "anchor": anchor, "block_mom": mom}
+            metrics["wire_bytes"] = jnp.where(is_sync, wire_bytes, 0.0)
+        else:
+            mixed = elastic_mix(params, state["step"])
+            upd_params, new_opt = jax.vmap(
+                optimizer.update, in_axes=(0, 0, 0, None)
+            )(g_l, opt, mixed, lr)
+            # contributors step from the mixed iterate; alive
+            # non-contributors keep the mixed iterate (they gossiped but
+            # computed nothing); the dead stay exactly where they were
+            new_params = _sel(active, _sel(gmask, upd_params, mixed), params)
+            new_opt = _sel(gmask, new_opt, opt)
+            out = {"params": new_params, "opt": new_opt,
+                   "step": state["step"] + 1}
+            metrics["wire_bytes"] = wire_bytes
+
+        if strategy.stale:
+            out["prev_params"] = params
+        if "comm" in state:            # unreachable for topk (mixer raises)
+            out["comm"] = state["comm"]
+        out["staleness"] = jnp.where(gmask > 0, 0, staleness + 1
+                                     ).astype(jnp.int32)
+        metrics["n_active"] = n_act
+        metrics["n_contrib"] = jnp.sum(gmask)
+        metrics["staleness_max"] = jnp.max(out["staleness"] * (active > 0))
+        if with_consensus:
+            metrics["consensus"] = _masked_consensus(out["params"], active)
         return out, metrics
 
     return step

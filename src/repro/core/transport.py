@@ -192,6 +192,11 @@ class Transport:
     # (pure-gossip divergence beyond it); 1.0 (plain mixing) is only safe
     # for near-exact wires.
     gossip_gamma: float = 0.0
+    # elastic mixing only: staleness damping λ — a learner whose params
+    # are s steps behind gets confidence 1/(1 + λ·s) in the mixing
+    # matrix (mixing.staleness_damped; docs/fault_tolerance.md).  0
+    # disables damping.  Ignored by the non-elastic make_mixer path.
+    staleness_lambda: float = 0.0
 
     def __post_init__(self):
         if self.topology not in TOPOLOGIES:
@@ -216,6 +221,9 @@ class Transport:
         if not 0.0 <= self.gossip_gamma <= 1.0:
             raise ValueError(f"gossip_gamma must be in [0, 1] (0 = auto), "
                              f"got {self.gossip_gamma}")
+        if self.staleness_lambda < 0.0:
+            raise ValueError(f"staleness_lambda must be >= 0, "
+                             f"got {self.staleness_lambda}")
 
     @property
     def resolved_gamma(self) -> float:
@@ -287,6 +295,81 @@ class Transport:
                 return lambda p, step, comm: (exp(p, step), comm)
 
         return functools.partial(_general_mix, t, n_learners)
+
+    def make_elastic_mixer(self, n_learners: int, *, fault_seed: int = 0,
+                           with_corruption: bool = False):
+        """Elastic-membership mixing (docs/fault_tolerance.md): returns
+
+            ``mix(params, step, active, staleness, edge_ok, corrupt)
+              -> mixed``
+
+        where the masks come from ``repro.core.faults.FaultPlan.
+        step_inputs`` plus the per-learner staleness counters carried in
+        strategy state.  The topology is rebuilt every step over the
+        live set (``mixing.elastic_matrix``): dead learners are identity
+        rows (their replicas frozen bit-for-bit), dropped gossip edges
+        return their mass to the diagonal, and with ``staleness_lambda``
+        > 0 learners s steps behind are down-weighted by 1/(1 + λ·s).
+        All inputs may be traced — one jit compile covers the whole run.
+
+        Differences from :meth:`make_mixer`:
+
+        * single-stage matrix contraction — ``intra_wire`` does not
+          apply (the hierarchical intra/inter stages collapse into one
+          doubly-stochastic matrix, coded uniformly with ``wire``);
+        * no comm state — difference-coded wires (topk) are REJECTED:
+          their shared public estimate assumes every tracker sees every
+          payload, which elastic membership breaks (a rejoiner's
+          estimate is stale-by-unknown), so there is no correct EF
+          residual to carry.  Use f32/bf16/int8 wires under faults.
+        * the local replica always stays exact: only the peer view is
+          wire-coded, and (``with_corruption``) only the peer view picks
+          up the fault plan's payload noise — deterministic per
+          (fault_seed, step, leaf).
+        """
+        t = self
+        if t.needs_state:
+            raise ValueError(
+                f"wire {t.wire!r} is difference-coded (error-feedback "
+                f"state) and cannot run under elastic membership: the "
+                f"shared public estimate desynchronizes when learners "
+                f"crash or rejoin — use an f32/bf16/int8 wire with "
+                f"--fault-* runs")
+        if t.topology == "hierarchical" and n_learners % t.pod_size:
+            raise ValueError(
+                f"hierarchical topology needs pod_size ({t.pod_size}) to "
+                f"divide n_learners ({n_learners})")
+
+        def mix(params, step, active, staleness, edge_ok, corrupt):
+            if t.topology == "none":
+                return params
+            T = mixing.elastic_matrix(
+                active, t.topology, step=step, pod_size=t.pod_size,
+                staleness=staleness, staleness_lambda=t.staleness_lambda,
+                edge_ok=edge_ok)
+            diag = jnp.diag(T)
+            off = T - jnp.diag(diag)
+
+            def one(i, w):
+                wf = w.astype(jnp.float32).reshape(n_learners, -1)
+                d = _coded(t, t.wire, wf)
+                if with_corruption:
+                    key = jax.random.fold_in(
+                        jax.random.fold_in(
+                            jax.random.PRNGKey(fault_seed), step), i)
+                    rms = jnp.sqrt(jnp.mean(d * d, axis=1, keepdims=True))
+                    noise = jax.random.normal(key, d.shape, jnp.float32)
+                    d = d + corrupt[:, None] * rms * noise
+                # peers' views arrive through the (coded, possibly
+                # corrupted) wire; the local replica contributes exactly
+                out = off @ d + diag[:, None] * wf
+                return out.reshape(w.shape).astype(w.dtype)
+
+            leaves, treedef = jax.tree.flatten(params)
+            return jax.tree.unflatten(
+                treedef, [one(i, w) for i, w in enumerate(leaves)])
+
+        return mix
 
     # -- telemetry ------------------------------------------------------
     def wire_bytes(self, params) -> float:

@@ -40,12 +40,20 @@ def setup_training(cfg, mesh, *, strategy_name: str = None,
                    n_learners: int = None, optimizer_name: str = "sgd",
                    lr_schedule=None, seed: int = 0, multi_pod: bool = False,
                    with_consensus: bool = False, kernel_impl: str = "jax",
-                   microbatches: int = None, transport=None):
+                   microbatches: int = None, transport=None,
+                   elastic: bool = False, fault_seed: int = 0,
+                   with_corruption: bool = False):
     """Build sharded train state + jitted step for one arch on one mesh.
 
     ``transport`` overrides the communication substrate (topology × wire
     × bucketing); default: the cfg's ``comm_*`` knobs resolved against
     the strategy (see repro.core.transport and docs/strategies.md).
+
+    ``elastic=True`` builds the fault-tolerant step instead
+    (``ST.make_elastic_train_step``): it takes a third ``faults``
+    argument — one ``FaultPlan.step_inputs`` dict per step — and runs
+    the strategy under elastic membership with staleness-aware mixing
+    (docs/fault_tolerance.md).
     """
     strategy = ST.get_strategy(strategy_name or cfg.train_strategy)
     n_learners = n_learners if n_learners is not None else cfg.n_learners
@@ -64,10 +72,17 @@ def setup_training(cfg, mesh, *, strategy_name: str = None,
     def loss_fn(params, batch):
         return model.loss_fn(params, batch, kernel_impl=kernel_impl)
 
-    step_fn = ST.make_train_step(
-        strategy, loss_fn, opt, lr_schedule,
-        n_learners=n_learners, microbatches=microbatches,
-        with_consensus=with_consensus, transport=transport)
+    if elastic:
+        step_fn = ST.make_elastic_train_step(
+            strategy, loss_fn, opt, lr_schedule,
+            n_learners=n_learners, microbatches=microbatches,
+            with_consensus=with_consensus, transport=transport,
+            fault_seed=fault_seed, with_corruption=with_corruption)
+    else:
+        step_fn = ST.make_train_step(
+            strategy, loss_fn, opt, lr_schedule,
+            n_learners=n_learners, microbatches=microbatches,
+            with_consensus=with_consensus, transport=transport)
 
     pspecs = model.param_specs()
     lead = ((n_learners, "learner"),) if strategy.replicated else ()
@@ -78,7 +93,11 @@ def setup_training(cfg, mesh, *, strategy_name: str = None,
         if strategy.replicated:
             params = ST.stack_for_learners(params, n_learners)
         params = jax.tree.map(jax.device_put, params, param_shardings)
-        state = ST.init_state(strategy, params, opt, transport=transport)
+        if elastic:
+            state = ST.init_elastic_state(strategy, params, opt,
+                                          transport=transport)
+        else:
+            state = ST.init_state(strategy, params, opt, transport=transport)
         jit_step = jax.jit(step_fn, donate_argnums=(0,))
 
     meta = dict(model=model, rules=rules, strategy=strategy,
@@ -145,6 +164,46 @@ def main(argv=None):
     ap.add_argument("--comm-topk-frac", type=float, default=0.0,
                     help="topk wire: fraction of entries shipped (0 = "
                          "cfg value, 0.01)")
+    ap.add_argument("--comm-staleness-lambda", type=float, default=0.0,
+                    help="elastic mixing: staleness damping λ — a "
+                         "learner s steps behind mixes with confidence "
+                         "1/(1 + λ·s); 0 = cfg value "
+                         "(docs/fault_tolerance.md)")
+    ap.add_argument("--resume", action="store_true",
+                    help="require and restore the latest checkpoint in "
+                         "--ckpt-dir: optimizer state, comm "
+                         "error-feedback residuals and the data cursor "
+                         "all resume bit-exactly (recovery contract in "
+                         "docs/fault_tolerance.md); fails if nothing to "
+                         "resume")
+    ap.add_argument("--fault-stragglers", default="",
+                    help="fault plan: 'learner:factor,...' — e.g. '0:4' "
+                         "makes learner 0 contribute a gradient only "
+                         "every 4th step (docs/fault_tolerance.md); any "
+                         "--fault-* flag switches to the elastic "
+                         "fault-tolerant step")
+    ap.add_argument("--fault-departures", default="",
+                    help="fault plan: 'learner:step[:rejoin],...' — "
+                         "e.g. '1:30:60' crashes learner 1 at step 30 "
+                         "and rejoins it (re-seeded from the survivors' "
+                         "consensus) at step 60")
+    ap.add_argument("--fault-drop-prob", type=float, default=0.0,
+                    help="fault plan: per-step probability that an "
+                         "undirected gossip edge drops (both endpoints "
+                         "fall back to themselves)")
+    ap.add_argument("--fault-stall-prob", type=float, default=0.0,
+                    help="fault plan: per-step probability a learner "
+                         "enters a heavy-tailed (Pareto) stall")
+    ap.add_argument("--fault-corrupt-prob", type=float, default=0.0,
+                    help="fault plan: per-step probability a learner's "
+                         "outgoing payload picks up noise (receivers "
+                         "only; needs --fault-corrupt-scale > 0)")
+    ap.add_argument("--fault-corrupt-scale", type=float, default=0.0,
+                    help="fault plan: corruption noise RMS relative to "
+                         "the payload RMS")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="fault plan: seed of the deterministic fault "
+                         "schedule (same seed = same cluster weather)")
     ap.add_argument("--var-len", action="store_true",
                     help="variable-length utterances: batches carry a "
                          "'lengths' key, loss/BLSTM/aggregation mask "
@@ -182,6 +241,8 @@ def main(argv=None):
         changes["comm_pod_size"] = args.comm_pod_size
     if args.comm_topk_frac:
         changes["comm_topk_frac"] = args.comm_topk_frac
+    if args.comm_staleness_lambda:
+        changes["comm_staleness_lambda"] = args.comm_staleness_lambda
     if changes:
         cfg = dataclasses.replace(cfg, **changes)
     seq_len = args.seq_len or (21 if cfg.family == "lstm" else 128)
@@ -190,6 +251,25 @@ def main(argv=None):
     if not strategy.replicated:
         n_learners = 1
     batch = args.batch or max(8, 2 * n_learners)
+
+    # any --fault-* flag switches to the elastic fault-tolerant step,
+    # driven by one deterministic FaultPlan (docs/fault_tolerance.md)
+    from repro.core.faults import (FaultPlan, parse_departures,
+                                   parse_stragglers)
+    elastic = bool(args.fault_stragglers or args.fault_departures
+                   or args.fault_drop_prob or args.fault_stall_prob
+                   or args.fault_corrupt_prob)
+    plan = None
+    if elastic:
+        plan = FaultPlan(
+            n_learners, seed=args.fault_seed,
+            stragglers=parse_stragglers(args.fault_stragglers),
+            departures=parse_departures(args.fault_departures),
+            drop_prob=args.fault_drop_prob,
+            stall_prob=args.fault_stall_prob,
+            corrupt_prob=args.fault_corrupt_prob,
+            corrupt_scale=args.fault_corrupt_scale)
+        print(plan.describe(), flush=True)
 
     if args.mesh == "local":
         mesh = make_local_mesh(data=len(jax.devices()))
@@ -202,15 +282,21 @@ def main(argv=None):
         multi_pod=args.mesh == "multipod", with_consensus=args.consensus,
         kernel_impl=args.kernel_impl,
         lr_schedule=paper_recipe(steps_per_epoch=max(args.steps // 16, 1),
-                                 base_lr=0.05, peak_lr=0.2))
+                                 base_lr=0.05, peak_lr=0.2),
+        elastic=elastic, fault_seed=args.fault_seed,
+        with_corruption=args.fault_corrupt_prob > 0)
 
+    if args.resume and not args.ckpt_dir:
+        raise SystemExit("--resume needs --ckpt-dir")
     start = 0
     if args.ckpt_dir:
         try:
             state, start = restore(args.ckpt_dir, state)
             print(f"restored checkpoint at step {start}")
         except FileNotFoundError:
-            pass
+            if args.resume:
+                raise SystemExit(
+                    f"--resume: no checkpoint under {args.ckpt_dir}")
 
     ds = make_dataset(cfg, seq_len=seq_len, batch=batch, seed=args.seed,
                       var_len=args.var_len or args.bucket,
@@ -218,6 +304,7 @@ def main(argv=None):
     pf = Prefetcher(ds, start_step=start)
     t0 = time.time()
     valid_frames = padded_frames = 0
+    metrics = None
     with use_mesh(meta["mesh"]):
         for k in range(start, args.steps):
             batch_np = pf.next()
@@ -225,7 +312,12 @@ def main(argv=None):
                 valid_frames += int(batch_np["lengths"].sum())
                 padded_frames += (batch_np["features"].shape[0]
                                   * batch_np["features"].shape[1])
-            state, metrics = jit_step(state, batch_np)
+            if plan is not None:
+                faults = plan.step_inputs(k)
+                ST.check_active(faults["active"])
+                state, metrics = jit_step(state, batch_np, faults)
+            else:
+                state, metrics = jit_step(state, batch_np)
             if k % args.log_every == 0:
                 loss = float(metrics["loss"])
                 line = (f"step {k:5d} loss {loss:.4f} "
@@ -239,6 +331,10 @@ def main(argv=None):
                     # (Transport.wire_bytes; docs/strategies.md)
                     wb = float(metrics["wire_bytes"])
                     line += f" wire {wb/2**20:.2f}MB"
+                if "n_active" in metrics:
+                    line += (f" act {int(metrics['n_active'])}/"
+                             f"{meta['n_learners']}"
+                             f" stale {int(metrics['staleness_max'])}")
                 if "consensus" in metrics:
                     line += f" consensus {float(metrics['consensus']):.3e}"
                 print(line, flush=True)
@@ -246,6 +342,9 @@ def main(argv=None):
                     (k + 1) % args.ckpt_every == 0:
                 save(args.ckpt_dir, k + 1, state)
     pf.close()
+    if metrics is not None:
+        # one parseable line for kill-and-resume / fault-smoke comparisons
+        print(f"final loss {float(metrics['loss']):.6f}")
     print(f"done: {args.steps - start} steps in {time.time()-t0:.1f}s "
           f"[{meta['strategy'].name}, L={meta['n_learners']}]")
 

@@ -42,3 +42,15 @@ def test_checker_detects_missing_flag(tmp_path):
     (tmp_path / check_docs.CONFIG_SOURCE).write_text(
         "class ArchConfig:\n    ghost_knob: int = 0\n")
     assert check_docs.check_config_reference(tmp_path) != []
+
+
+def test_readme_docs_index_complete():
+    assert check_docs.check_docs_index() == []
+
+
+def test_checker_detects_unlinked_docs_page(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "orphan.md").write_text("# orphan\n")
+    (tmp_path / "README.md").write_text("[a](docs/linked.md)\n")
+    problems = check_docs.check_docs_index(tmp_path)
+    assert problems and "orphan.md" in problems[0]

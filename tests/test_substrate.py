@@ -132,7 +132,7 @@ def test_checkpoint_keep_bound(tmp_path):
 def test_checkpoint_shape_mismatch_raises(tmp_path):
     d = str(tmp_path / "ck")
     ckpt.save(d, 0, {"w": jnp.zeros((2,))})
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="saved shape"):
         ckpt.restore(d, {"w": jnp.zeros((3,))})
 
 

@@ -2,7 +2,7 @@
 """Docs consistency checker (the CI `docs` job; also run as a tier-1
 test via tests/test_docs.py).
 
-Three checks, all against the working tree:
+Four checks, all against the working tree:
 
 1. **Intra-repo markdown links** — every relative `[text](target)` link
    in a tracked *.md file must resolve to an existing file/directory
@@ -14,6 +14,8 @@ Three checks, all against the working tree:
 3. **README config-knob reference** — every `ArchConfig` field of
    `src/repro/configs/base.py` must be mentioned in README.md (as
    `` `name` ``), so new config knobs cannot land undocumented.
+4. **README docs index** — every `docs/*.md` must be linked from
+   README.md, so a new docs page cannot land undiscoverable.
 
 Exit status is non-zero with one line per problem.
 """
@@ -103,9 +105,19 @@ def check_config_reference(root: Path = ROOT) -> list:
             if f"`{knob}`" not in readme]
 
 
+def check_docs_index(root: Path = ROOT) -> list:
+    """docs/*.md pages not linked from README.md."""
+    readme = (root / "README.md").read_text(encoding="utf-8")
+    linked = {t.split("#", 1)[0] for t in _LINK.findall(readme)}
+    return [f"README.md: docs page docs/{md.name} not linked from the "
+            f"docs index"
+            for md in sorted((root / "docs").glob("*.md"))
+            if f"docs/{md.name}" not in linked]
+
+
 def main() -> int:
     problems = (check_links() + check_flag_reference()
-                + check_config_reference())
+                + check_config_reference() + check_docs_index())
     for p in problems:
         print(p)
     if problems:
