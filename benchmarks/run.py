@@ -31,6 +31,7 @@ def all_benches():
         ("longseq", _longseq),
         ("decode_microbench", _decode_microbench),
         ("decode_wer", T.bench_decode_wer),
+        ("serve_microbench", _serve_microbench),
     ]
 
 
@@ -471,6 +472,105 @@ def _kernel_microbench():
             jax.block_until_ready(fn())
         rows.append((f"kernels/{name}", (time.perf_counter() - t0) / 5 * 1e6,
                      "us/call cpu"))
+    return rows
+
+
+def _serve_microbench():
+    """Serving hot-path microbench (``--only serve``), the decode
+    counterpart of ``--only decode``: (a) single-token decode-attention
+    latency, jax vs the Pallas streaming kernel (interpret mode on CPU —
+    relative trajectory, not TPU numbers), across cache lengths S that
+    cross many S-tiles; (b) prefix-beam throughput at top-C ∈ {V, 64,
+    16} vocab pruning (C=V is the unpruned baseline; the planted-path
+    posteriors keep the per-frame support well inside C=16, so all
+    three decode identically); (c) the VMEM accounting behind both —
+    ``beam_cand_bytes`` shows the beam candidate working set scaling
+    with C, not V, and ``decode_attn_vmem_bytes`` shows the attention
+    resident set independent of S."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.decode import beam_search
+    from repro.decode.kernel import auto_block_b_decode, beam_cand_bytes
+    from repro.kernels.decode_attention import (auto_block_s_decode,
+                                                decode_attn_vmem_bytes)
+    from repro.models import attention as A
+
+    rows = []
+
+    # (a) decode-attn latency: single-row q vs (B, S, KV, E) cache
+    B, H, KV, E = 4, 8, 2, 64
+    M = H // KV
+    key = jax.random.PRNGKey(0)
+    for S in (512, 2048, 8192):
+        q = jax.random.normal(key, (B, 1, H, E), jnp.float32)
+        kc = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, E),
+                               jnp.float32)
+        vc = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, E),
+                               jnp.float32)
+        pos = jnp.int32(S - 1)
+        for impl in ("jax", "pallas"):
+            fn = jax.jit(functools.partial(A.attn_decode, impl=impl,
+                                           interpret=True))
+            jax.block_until_ready(fn(q, kc, vc, pos))      # compile
+            n = 5 if impl == "jax" else 1
+            t0 = time.time()
+            for _ in range(n):
+                jax.block_until_ready(fn(q, kc, vc, pos))
+            dt = (time.time() - t0) / n
+            bs = auto_block_s_decode(S, M, E)
+            rows.append((f"serve/decode_attn_ms_{impl}_S{S}", dt * 1e3,
+                         f"B={B} H={H} KV={KV} E={E}"
+                         + (f" block_s={bs} interpret cpu"
+                            if impl == "pallas" else " cpu")))
+    rows.append(("serve/decode_attn_vmem_kb",
+                 decode_attn_vmem_bytes(auto_block_s_decode(8192, M, E),
+                                        M, E) / 1024,
+                 "resident set per grid program — independent of S"))
+
+    # (b) beam throughput at top-C ∈ {V, 64, 16}
+    B, T, V, K = 8, 32, 512, 8
+    rng = np.random.default_rng(0)
+    path = rng.integers(0, 8, size=(B, T)).astype(np.int32)  # tiny support
+    path[rng.random((B, T)) < 0.5] = 0
+    logits = (4.0 * (np.arange(V)[None, None, :] == path[:, :, None])
+              + rng.normal(0.0, 0.5, size=(B, T, V))).astype(np.float32)
+    base_toks = None
+    for C in (V, 64, 16):
+        fn = jax.jit(functools.partial(beam_search, beam=K,
+                                       semiring="sum", topc=C))
+        toks, lens, _ = jax.block_until_ready(fn(jnp.asarray(logits)))
+        t0 = time.time()
+        for _ in range(3):
+            out = jax.block_until_ready(fn(jnp.asarray(logits)))
+        dt = (time.time() - t0) / 3
+        label = "V" if C == V else str(C)
+        decoded = int(np.asarray(lens).sum())
+        if base_toks is None:
+            base_toks = np.asarray(toks)
+            agree = "unpruned baseline"
+        else:
+            agree = ("identical to unpruned"
+                     if np.array_equal(np.asarray(toks), base_toks)
+                     else "DIVERGED from unpruned")
+        rows.append((f"serve/beam_tok_per_s_C{label}",
+                     decoded / max(dt, 1e-9),
+                     f"B={B} T={T} V={V} K={K}, {agree}"))
+
+    # (c) VMEM accounting: candidate working set scales with C, not V
+    for C, label in ((0, "V"), (64, "64"), (16, "16")):
+        kb = beam_cand_bytes(K, V, C) / 1024
+        bb = auto_block_b_decode(1 << 20, K, V, topc=C)
+        rows.append((f"serve/beam_cand_kb_C{label}", kb,
+                     f"f32 KB per batch row (V={V} K={K}); "
+                     f"auto block_b {bb}"))
+    ratio = beam_cand_bytes(K, V) / beam_cand_bytes(K, V, 16)
+    rows.append(("serve/beam_cand_shrink_C16", ratio,
+                 "x smaller candidate VMEM vs unpruned — scales with C, "
+                 "not V"))
     return rows
 
 

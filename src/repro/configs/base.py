@@ -147,6 +147,13 @@ class ArchConfig:
     # length-normalization alpha for the final hypothesis ranking
     # (score / max(len, 1)**alpha; 0 = raw log-prob)
     beam_len_norm: float = 0.0
+    # per-frame top-C vocab pruning of the beam candidate grid (0 = off:
+    # full beam x V).  Exact whenever C covers the frame's extend support
+    # (docs/decoding.md §Top-C); candidate VMEM scales with C, not V
+    beam_topc: int = 0
+    # decode-step attention: '' (follow the launcher's --kernel-impl) |
+    # 'jax' | 'pallas' (repro.kernels.decode_attention streaming kernel)
+    attn_decode_impl: str = ""
 
     # which shapes this arch supports (see DESIGN.md skip notes)
     skip_shapes: tuple = ()

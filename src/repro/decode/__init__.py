@@ -1,6 +1,7 @@
 """Recognition-quality decode subsystem: batched CTC prefix beam search
-(jnp + Pallas kernel), streaming beam-state carry, and the serving
-argmax kernel.  Contracts in docs/decoding.md."""
+(jnp + Pallas kernel, optional top-C vocab pruning), streaming
+beam-state carry, and the serving argmax kernel.  Contracts in
+docs/decoding.md."""
 from repro.decode.beam import (  # noqa: F401
     BeamState,
     beam_decode,
@@ -10,5 +11,9 @@ from repro.decode.beam import (  # noqa: F401
     finalize,
     init_state,
     reset_rows,
+    topc_scores,
 )
-from repro.decode.kernel import argmax_tokens  # noqa: F401
+from repro.decode.kernel import (  # noqa: F401
+    argmax_tokens,
+    beam_cand_bytes,
+)

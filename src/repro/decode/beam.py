@@ -219,6 +219,117 @@ def frame_step_scores(logp, p_b, p_nb, last, phash, plen, *, blank: int,
     return sel, new_pb, new_pnb
 
 
+def topc_scores(logp, C: int):
+    """Per-row top-C of (B, V) log-probs by C iterative argmax passes
+    (first-occurrence tie break) — the same selection procedure in the
+    jnp and Pallas paths, so the two impls match bit-for-bit; on distinct
+    values it equals ``jax.lax.top_k``.  Values are gathered from the
+    ORIGINAL row (the sweep stamps a workspace only), so downstream
+    arithmetic sees the exact same floats as the unpruned path.
+
+    Returns ``(vals (B, C) f32 descending, idx (B, C) i32)``."""
+    B, V = logp.shape
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (B, V), 1)
+    work = logp
+    vals, idxs = [], []
+    for _ in range(C):
+        best = jnp.argmax(work, axis=1).astype(jnp.int32)        # (B,)
+        vals.append(jnp.take_along_axis(logp, best[:, None], 1)[:, 0])
+        idxs.append(best)
+        work = jnp.where(col_ids == best[:, None], NEG, work)
+    return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)
+
+
+def frame_step_scores_topc(logp, p_b, p_nb, last, phash, plen, *,
+                           blank: int, max_len: int, semiring: str,
+                           topc: int):
+    """Top-C vocab-pruned frame step: identical contract to
+    :func:`frame_step_scores` (``sel`` still indexes the K*V grid, so
+    :func:`apply_selection` is shared verbatim), but the extend grid is
+    (K, C) over the frame's top-C tokens instead of (K, V).
+
+    Exact-mass corrections keep every non-extend term un-pruned: the
+    stay scores gather ``logp[blank]`` and ``logp[last[k]]`` directly,
+    and the duplicate-merge contribution ``ext[b, k, last[j]]`` is
+    recomputed from scalars (``base(k, last[j]) + logp[last[j]]`` — the
+    same floats the unpruned path gathers from the (K, V) grid), so
+    pruning only ever drops *extension* candidates.  Hence the exactness
+    condition (docs/decoding.md §Top-C): the pruned search is
+    bit-identical to the unpruned one whenever every extend selected by
+    the unpruned top-K uses a token inside the frame's top-C.  C = V is
+    unconditionally identical (ties aside — both paths break ties
+    first-occurrence, but in different candidate layouts).
+    """
+    B, V = logp.shape
+    K = p_b.shape[1]
+    C = topc
+    merge = _merge_fn(semiring)
+    reduce_ = _reduce_fn(semiring)
+
+    vals, idx = topc_scores(logp, C)                             # (B, C)
+
+    tot = merge(p_b, p_nb)                                       # (B, K)
+    stay_pb = tot + logp[:, blank][:, None]
+    lp_last = jnp.take_along_axis(logp, jnp.maximum(last, 0), axis=1)
+    stay_pnb = jnp.where(last >= 0, p_nb + lp_last, NEG)
+
+    idx3 = idx[:, None, :]                                       # (B, 1, C)
+    base = jnp.where(idx3 == last[:, :, None], p_b[:, :, None],
+                     tot[:, :, None])
+    ext = base + vals[:, None, :]                                # (B, K, C)
+    ext = jnp.where(idx3 == blank, NEG, ext)
+    ext = jnp.where(plen[:, :, None] >= max_len, NEG, ext)       # U cap
+
+    # Duplicate merge — same (K, K) check as the unpruned path; the
+    # gathered e[b,k,j] = ext[b,k,last[j]] is rebuilt from scalars with
+    # the same masks the unpruned path applied (U cap; last[j] is never
+    # blank), so the merged mass is exact even when last[j] is pruned.
+    match = ((plen[:, None, :] == plen[:, :, None] + 1)
+             & (phash[:, None, :]
+                == phash[:, :, None] * HASH_P + last[:, None, :])
+             & (last[:, None, :] >= 0))                          # (B, K, K)
+    base_kj = jnp.where(last[:, None, :] == last[:, :, None],
+                        p_b[:, :, None], tot[:, :, None])        # (B, K, K)
+    e = base_kj + lp_last[:, None, :]
+    e = jnp.where(plen[:, :, None] >= max_len, NEG, e)
+    contrib = reduce_(jnp.where(match, e, NEG), 1)               # (B, K)
+    stay_pnb = merge(stay_pnb, contrib)
+    for j in range(K):                           # kill the merged extends
+        hit = match[:, :, j][:, :, None] & (idx3 == last[:, j][:, None, None])
+        ext = jnp.where(hit, NEG, ext)
+
+    # Candidate grid (B, K*(C+1)): column 0 of each parent is its stay.
+    stay_tot = merge(stay_pb, stay_pnb)
+    cand = jnp.concatenate([stay_tot[:, :, None], ext], axis=2)
+    cand = cand.reshape(B, K * (C + 1))
+    ext_flat = ext.reshape(B, K * C)
+
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (B, K * (C + 1)), 1)
+    sels = []
+    work = cand
+    for _ in range(K):
+        best = jnp.argmax(work, axis=1).astype(jnp.int32)        # (B,)
+        sels.append(best)
+        work = jnp.where(col_ids == best[:, None], NEG, work)
+    sel_c = jnp.stack(sels, axis=1)                              # (B, K)
+
+    # Map back to the K*V convention so apply_selection is shared.
+    parent = sel_c // (C + 1)
+    within = sel_c % (C + 1)
+    is_stay = within == 0
+    tok = jnp.take_along_axis(
+        idx, jnp.clip(within - 1, 0, C - 1).reshape(B, K), axis=1)
+    c = jnp.where(is_stay, blank, tok)
+    sel = parent * V + c
+    new_pb = jnp.where(is_stay, jnp.take_along_axis(stay_pb, parent, 1),
+                       NEG)
+    new_pnb = jnp.where(is_stay, jnp.take_along_axis(stay_pnb, parent, 1),
+                        jnp.take_along_axis(
+                            ext_flat,
+                            parent * C + jnp.clip(within - 1, 0, C - 1), 1))
+    return sel, new_pb, new_pnb
+
+
 def apply_selection(state: BeamState, sel, new_pb, new_pnb, *, blank: int,
                     vocab: int) -> BeamState:
     """Materialize the selected candidates into the next beam state
@@ -253,7 +364,8 @@ def apply_selection(state: BeamState, sel, new_pb, new_pnb, *, blank: int,
 
 def decode_chunk(state: BeamState, logits, lengths=None, *, blank: int = 0,
                  semiring: str = "max", impl: str = "jax",
-                 interpret=None, block_b: int = None) -> BeamState:
+                 interpret=None, block_b: int = None,
+                 topc: int = 0) -> BeamState:
     """Advance the beams over a chunk of frames.
 
     logits: (B, Tc, V) raw (pre-softmax); ``lengths`` (B,) i32 counts
@@ -262,6 +374,9 @@ def decode_chunk(state: BeamState, logits, lengths=None, *, blank: int = 0,
     one-shot decodes of the same stream are bit-identical.
     ``impl='pallas'`` routes the per-frame step through the Pallas
     kernel (``decode/kernel.py``); interpret/block_b as there.
+    ``topc`` > 0 prunes the extend grid to the frame's top-C tokens
+    (:func:`frame_step_scores_topc`; exact when C covers the per-frame
+    support — docs/decoding.md §Top-C); 0 or >= V runs unpruned.
     """
     B, Tc, V = logits.shape
     K = state.p_b.shape[1]
@@ -269,6 +384,7 @@ def decode_chunk(state: BeamState, logits, lengths=None, *, blank: int = 0,
     if K > V:
         raise ValueError(f"beam width {K} exceeds vocab {V}")
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    topc = 0 if topc >= V else topc
 
     if impl == "pallas":
         from repro.decode.kernel import beam_frame_step
@@ -277,7 +393,12 @@ def decode_chunk(state: BeamState, logits, lengths=None, *, blank: int = 0,
             return beam_frame_step(
                 lp, st.p_b, st.p_nb, st.last, st.phash, st.lens,
                 blank=blank, max_len=U, semiring=semiring,
-                block_b=block_b, interpret=interpret)
+                block_b=block_b, interpret=interpret, topc=topc)
+    elif topc:
+        def step_fn(lp, st):
+            return frame_step_scores_topc(
+                lp, st.p_b, st.p_nb, st.last, st.phash, st.lens,
+                blank=blank, max_len=U, semiring=semiring, topc=topc)
     else:
         def step_fn(lp, st):
             return frame_step_scores(
@@ -335,7 +456,7 @@ def finalize(state: BeamState, *, len_norm: float = 0.0,
 def beam_search(logits, lengths=None, *, beam: int = 8, blank: int = 0,
                 semiring: str = "max", len_norm: float = 0.0,
                 max_len: int = None, impl: str = "jax", interpret=None,
-                block_b: int = None):
+                block_b: int = None, topc: int = 0):
     """One-shot batched prefix beam search over (B, T, V) logits.
 
     Returns ``(tokens (B, U) i32 -1-padded, lens (B,), scores (B,))``.
@@ -346,7 +467,7 @@ def beam_search(logits, lengths=None, *, beam: int = 8, blank: int = 0,
     state = init_state(B, beam, U)
     state = decode_chunk(state, logits, lengths, blank=blank,
                          semiring=semiring, impl=impl, interpret=interpret,
-                         block_b=block_b)
+                         block_b=block_b, topc=topc)
     return finalize(state, len_norm=len_norm, semiring=semiring)
 
 

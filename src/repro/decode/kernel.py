@@ -18,11 +18,16 @@ mode, like every other kernel in this repo).  The state *update* (token
 append, hash/length bookkeeping) stays in jnp outside the kernel: it is
 O(K·U) gathers with no V-sized intermediates.
 
-VMEM math (docs/decoding.md): the resident set per grid step is about
-``bB*V*4`` (logp) + ``3 * bB*K*V*4`` (base/ext/candidate grids)
-+ small (bB, K) vectors — for (bB=8, K=8, V=512) about 0.5 MB, and the
-default ``block_b`` is picked by :func:`auto_block_b_decode` so the set
-fits the same 12 MB default budget the LSTM kernels use.  Off-TPU the
+VMEM math (docs/decoding.md, single source :func:`beam_cand_bytes`):
+the unpruned resident set per grid step is about ``bB*V*4`` (logp)
++ ``3 * bB*K*V*4`` (base/ext/candidate grids) + small (bB, K) vectors —
+for (bB=8, K=8, V=512) about 0.5 MB — and the default ``block_b`` is
+picked by :func:`auto_block_b_decode` so the set fits the same 12 MB
+default budget the LSTM kernels use.  ``topc=C`` swaps the body for
+``frame_step_scores_topc``: the K-scaled grids shrink from (K, V) to
+(K, C+1) and vocab survives only in the logp block + top-C sweep
+workspace, so the VMEM ceiling (and hence ``block_b``) stops scaling
+with vocab — the hard ceiling the unpruned kernel put on V.  Off-TPU the
 kernel executes in interpret mode (CI parity path); the gathers inside
 ``frame_step_scores`` are interpret-validated, compiled-TPU lowering is
 tracked with the other real-TPU items in ROADMAP.md.
@@ -42,31 +47,48 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.decode.beam import NEG, frame_step_scores
+from repro.decode.beam import (NEG, frame_step_scores,
+                               frame_step_scores_topc)
 from repro.kernels.lstm_cell import (DEFAULT_VMEM_BUDGET,
                                      _resolve_interpret)
 
 
+def beam_cand_bytes(beam: int, vocab: int, topc: int = 0) -> int:
+    """f32 bytes per batch row of the beam-step candidate working set —
+    the single source of the VMEM accounting (docs/decoding.md, the
+    ``--only serve`` bench).  Unpruned: ~4 live (K, V) grids
+    (base/ext/candidate/argmax sweep) + the (V,) logp block.  With
+    top-C pruning the K-scaled grids shrink to (K, C+1) — vocab only
+    enters through the logp block and its top-C sweep workspace, so the
+    candidate memory scales with C, not V."""
+    if topc and topc < vocab:
+        return (4 * beam * (topc + 1) + 2 * vocab + 2 * topc) * 4
+    return (4 * beam * vocab + vocab) * 4
+
+
 def auto_block_b_decode(B: int, beam: int, vocab: int,
-                        vmem_budget: int = None) -> int:
-    """Largest batch tile whose beam-step resident set fits the budget:
-    ~4 live (bB, K, V) f32 grids (ext/base/candidate/argmax sweep) plus
-    the (bB, V) logp block."""
+                        vmem_budget: int = None, topc: int = 0) -> int:
+    """Largest batch tile whose beam-step resident set
+    (:func:`beam_cand_bytes`) fits the budget."""
     budget = vmem_budget or DEFAULT_VMEM_BUDGET
-    per_row = (4 * beam * vocab + vocab) * 4
+    per_row = beam_cand_bytes(beam, vocab, topc)
     bb = max(1, budget // max(per_row, 1))
     return int(min(bb, B))
 
 
 def beam_frame_step(logp, p_b, p_nb, last, phash, plen, *, blank: int,
                     max_len: int, semiring: str, block_b: int = None,
-                    interpret=None):
+                    interpret=None, topc: int = 0):
     """Pallas-resident ``beam.frame_step_scores``: same signature and
-    bit-identical outputs ``(sel, new_pb, new_pnb)``."""
+    bit-identical outputs ``(sel, new_pb, new_pnb)``.  ``topc`` > 0
+    runs the fused top-C pruned step (``frame_step_scores_topc``): the
+    top-C sweep AND the pruned candidate grid live in one kernel, so
+    the (bB, K, V) grids never materialize."""
     B, V = logp.shape
     K = p_b.shape[1]
     interpret = _resolve_interpret(interpret)
-    bb = block_b or auto_block_b_decode(B, K, V)
+    topc = 0 if topc >= V else topc
+    bb = block_b or auto_block_b_decode(B, K, V, topc=topc)
     bb = max(1, min(bb, B))
 
     pad = (-B) % bb
@@ -81,9 +103,16 @@ def beam_frame_step(logp, p_b, p_nb, last, phash, plen, *, blank: int,
 
     def kernel(logp_ref, pb_ref, pnb_ref, last_ref, hash_ref, len_ref,
                sel_ref, npb_ref, npnb_ref):
-        sel, npb, npnb = frame_step_scores(
-            logp_ref[:], pb_ref[:], pnb_ref[:], last_ref[:], hash_ref[:],
-            len_ref[:], blank=blank, max_len=max_len, semiring=semiring)
+        if topc:
+            sel, npb, npnb = frame_step_scores_topc(
+                logp_ref[:], pb_ref[:], pnb_ref[:], last_ref[:],
+                hash_ref[:], len_ref[:], blank=blank, max_len=max_len,
+                semiring=semiring, topc=topc)
+        else:
+            sel, npb, npnb = frame_step_scores(
+                logp_ref[:], pb_ref[:], pnb_ref[:], last_ref[:],
+                hash_ref[:], len_ref[:], blank=blank, max_len=max_len,
+                semiring=semiring)
         sel_ref[:] = sel
         npb_ref[:] = npb
         npnb_ref[:] = npnb

@@ -1,0 +1,197 @@
+"""Pallas TPU decode-shaped attention — the serving hot path.
+
+The per-token decode step is the inverse of the flash kernel's regime:
+q is a single row per head while the KV cache is (B, S, KV, E) with S in
+the thousands, so the step is HBM-bound on the cache read and the only
+job of a kernel is to stream that read once at full bandwidth.  The
+layout keeps the tiny (M, E) q block and the f32 online-softmax carry
+(acc (M, E), m/l (M, 1)) resident in VMEM while the cache walks through
+in ``block_s`` tiles on the inner sequential grid axis:
+
+  grid = (B, KV, S // block_s);  VMEM per program:
+      q (M, E), k/v tiles 2 * (block_s, E), out (M, E)
+      + f32 scratch acc (M, E) + m, l (M, 1).
+
+S-tile count never changes the resident set, so arbitrarily long caches
+stream through a fixed VMEM budget (``auto_block_s_decode`` picks the
+largest power-of-two tile that fits; ``decode_attn_vmem_bytes`` is the
+single source of the accounting, quoted in docs/kernels.md).
+
+GQA grouping mirrors ``repro.models.attention.attn_decode``: the H query
+heads are reshaped to (KV, M = H // KV) groups so each grid point serves
+one kv-head's M queries against one cache stripe — the cache tile is
+read once for all M queries of its group.
+
+Masking matches the jax reference exactly: position t is attended iff
+``t <= pos`` (canonical) or ``t < pos`` (delta variant, old cache only)
+and ``pos - t < window``.  Both ``pos`` and ``window`` are TRACED
+scalars — the per-layer window rides through the layer scan as data
+(models/attention.py module docstring) — so they enter the kernel as
+(1, 1) SMEM blocks, never as static params.  Tiles entirely above
+``pos`` are skipped; the ragged last tile is handled by masking scores
+at ``t >= S`` AND zeroing out-of-bounds v rows (the block is padded with
+garbage that may be non-finite, and 0 * nan = nan would otherwise leak
+through the p @ v product).
+
+The ``delta`` variant fuses ``attn_decode_delta``: the new token's K/V
+column is folded into the online-softmax INIT (m = s_new, l = 1,
+acc = v_new) before the cache streams through, so the concat-and-resoftmax
+of the jax path disappears and the cache is still read exactly once.
+
+Numerics: scores, softmax and the accumulator are f32 regardless of
+cache dtype (matching the jax path's f32 softmax); the output is cast
+back to q.dtype.  Parity with ``attn_decode``/``attn_decode_delta`` is
+~1e-7 normalized in f32 (tests/test_decode_attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.lstm_cell import DEFAULT_VMEM_BUDGET, _resolve_interpret
+
+NEG_INF = -1e30
+_NO_WINDOW = 2 ** 30  # window >= S is full attention (cf. GLOBAL_WINDOW)
+
+
+def decode_attn_vmem_bytes(block_s: int, M: int, E: int,
+                           itemsize: int = 4) -> int:
+    """Resident VMEM bytes per grid program — independent of S."""
+    qo = 2 * M * E * itemsize              # q block + out block
+    kv = 2 * 2 * block_s * E * itemsize    # k + v tiles, double-buffered
+    carry = (M * E + 2 * M) * 4            # f32 acc + m + l scratch
+    return qo + kv + carry
+
+
+def auto_block_s_decode(S: int, M: int, E: int, itemsize: int = 4,
+                        vmem_budget=None) -> int:
+    """Largest power-of-two S-tile (<= S, >= 8) within the VMEM budget."""
+    budget = vmem_budget or DEFAULT_VMEM_BUDGET
+    bs = min(512, 1 << max(int(S) - 1, 0).bit_length())
+    while bs > 8 and decode_attn_vmem_bytes(bs, M, E, itemsize) > budget:
+        bs //= 2
+    return max(8, min(bs, S))
+
+
+def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, block_s, seq_len, n_tiles,
+                   scale, delta, kn_ref=None, vn_ref=None):
+    s_idx = pl.program_id(2)
+    pos = pos_ref[0, 0]
+    win = win_ref[0, 0]
+    q = q_ref[...].astype(jnp.float32)                       # (M, E)
+    M, E = q.shape
+
+    @pl.when(s_idx == 0)
+    def _init():
+        if delta:
+            # fold the new-token column into the carry: p_new = 1 at init
+            k1 = kn_ref[...].astype(jnp.float32)             # (1, E)
+            v1 = vn_ref[...].astype(jnp.float32)
+            s_new = jax.lax.dot_general(
+                q, k1, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale  # (M, 1)
+            m_ref[...] = s_new
+            l_ref[...] = jnp.ones((M, 1), jnp.float32)
+            acc_ref[...] = jnp.broadcast_to(v1, (M, E))
+        else:
+            m_ref[...] = jnp.full((M, 1), NEG_INF, jnp.float32)
+            l_ref[...] = jnp.zeros((M, 1), jnp.float32)
+            acc_ref[...] = jnp.zeros((M, E), jnp.float32)
+
+    @pl.when(s_idx * block_s <= pos)  # tiles above pos contribute nothing
+    def _tile():
+        k = k_ref[...].astype(jnp.float32)                   # (block_s, E)
+        v = v_ref[...].astype(jnp.float32)
+        t = s_idx * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_s), 1)
+        # ragged tail: garbage rows may be non-finite and 0 * nan = nan,
+        # so v must be zeroed — masking the scores alone is not enough
+        v = jnp.where(t.reshape(block_s, 1) < seq_len, v, 0.0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (M, block_s)
+        ok = (t < pos + (0 if delta else 1)) & (pos - t < win) \
+            & (t < seq_len)
+        s = jnp.where(ok, s, NEG_INF)
+        m_i, l_i, acc = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_ref[...] = alpha * l_i + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(s_idx == n_tiles - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, k_new=None,
+                     v_new=None, block_s=None, vmem_budget=None,
+                     interpret=None):
+    """Pallas decode attention.  q (B, 1, H, E) vs cache (B, S, KV, E).
+
+    ``k_new``/``v_new`` None selects the canonical mask (t <= pos; cache
+    already holds the new token — ``attn_decode``); passing both (B, 1,
+    KV, E) selects the fused delta variant (old cache strictly t < pos
+    plus the new column — ``attn_decode_delta``).  ``pos`` and ``window``
+    may be traced scalars; window None means full attention.
+    """
+    B, _, H, E = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    M = H // KV
+    delta = k_new is not None
+    interpret = _resolve_interpret(interpret)
+    if block_s is None:
+        block_s = auto_block_s_decode(S, M, E, k_cache.dtype.itemsize,
+                                      vmem_budget)
+    block_s = max(1, min(block_s, S))
+    n_tiles = pl.cdiv(S, block_s)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    win_arr = jnp.asarray(_NO_WINDOW if window is None else window,
+                          jnp.int32).reshape(1, 1)
+    qg = q.reshape(B, KV, M, E)
+    smem = pl.BlockSpec((1, 1), lambda b, g, s: (0, 0),
+                        memory_space=pltpu.SMEM)
+    cache_spec = pl.BlockSpec((None, block_s, None, E),
+                              lambda b, g, s: (b, s, g, 0))
+    q_spec = pl.BlockSpec((None, None, M, E), lambda b, g, s: (b, g, 0, 0))
+    in_specs = [smem, smem, q_spec, cache_spec, cache_spec]
+    args = [pos_arr, win_arr, qg, k_cache, v_cache]
+    kern = functools.partial(
+        _decode_kernel, block_s=block_s, seq_len=S, n_tiles=n_tiles,
+        scale=float(1.0 / np.sqrt(E)), delta=delta)
+    if delta:
+        new_spec = pl.BlockSpec((None, 1, None, E),
+                                lambda b, g, s: (b, 0, g, 0))
+        in_specs += [new_spec, new_spec]
+        args += [k_new, v_new]
+
+        def body(pos_ref, win_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                 o_ref, acc_ref, m_ref, l_ref):
+            kern(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, kn_ref=kn_ref, vn_ref=vn_ref)
+    else:
+        body = kern
+    out = pl.pallas_call(
+        body,
+        grid=(B, KV, n_tiles),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((None, None, M, E),
+                               lambda b, g, s: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, M, E), q.dtype),
+        scratch_shapes=[pltpu.VMEM((M, E), jnp.float32),
+                        pltpu.VMEM((M, 1), jnp.float32),
+                        pltpu.VMEM((M, 1), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return out.reshape(B, 1, H, E)

@@ -73,7 +73,8 @@ def evaluate_params(cfg, params, *, batches: int = 4, batch: int = 8,
                     bucket: bool = False, seed: int = 0,
                     kernel_impl: str = "jax", beam: int = None,
                     semiring: str = None, len_norm: float = None,
-                    blank: int = 0, decode_chunk: int = 0):
+                    blank: int = 0, decode_chunk: int = 0,
+                    topc: int = None):
     """Decode a held-out synthetic set and return the metrics dict.
 
     ``decode_chunk`` > 0 streams each batch through the chunked decode
@@ -84,6 +85,7 @@ def evaluate_params(cfg, params, *, batches: int = 4, batch: int = 8,
     semiring = semiring or getattr(cfg, "beam_semiring", "max")
     len_norm = (getattr(cfg, "beam_len_norm", 0.0)
                 if len_norm is None else len_norm)
+    topc = getattr(cfg, "beam_topc", 0) if topc is None else topc
     seq_len = seq_len or 21
     impl = "pallas" if kernel_impl == "pallas" else "jax"
 
@@ -103,7 +105,8 @@ def evaluate_params(cfg, params, *, batches: int = 4, batch: int = 8,
         st = DC.init_state(B, beam, T)
         for t in range(0, T, chunk):
             st = DC.decode_chunk(st, logits[:, t:t + chunk], lengths,
-                                 blank=blank, semiring=semiring, impl=impl)
+                                 blank=blank, semiring=semiring, impl=impl,
+                                 topc=topc)
         toks, lens, _ = DC.finalize(st, len_norm=len_norm,
                                     semiring=semiring)
         return toks, lens, DC.beam_occupancy(st)
@@ -207,6 +210,11 @@ def main(argv=None):
     ap.add_argument("--beam-len-norm", type=float, default=-1.0,
                     help="length-normalization alpha for final ranking "
                          "(-1 = cfg beam_len_norm)")
+    ap.add_argument("--beam-topc", type=int, default=-1,
+                    help="per-frame top-C vocab pruning of the beam "
+                         "candidate grid (0 = off, -1 = cfg beam_topc); "
+                         "exact when C covers the frame support "
+                         "(docs/decoding.md)")
     ap.add_argument("--decode-chunk", type=int, default=0,
                     help="stream the decode in chunks of this many "
                          "frames, carry = beam state (0 = one shot)")
@@ -228,6 +236,8 @@ def main(argv=None):
         changes["beam_semiring"] = args.beam_semiring
     if args.beam_len_norm >= 0:
         changes["beam_len_norm"] = args.beam_len_norm
+    if args.beam_topc >= 0:
+        changes["beam_topc"] = args.beam_topc
     if changes:
         cfg = dataclasses.replace(cfg, **changes)
 

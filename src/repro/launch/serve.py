@@ -6,10 +6,12 @@ advance all active slots together, free and refill on completion):
 * **LM** (decoder-only families): single-request prefill scatters cache
   rows into a stacked KV/SSM cache, then the jitted one-token
   ``decode_step`` advances every active slot.  Under ``--kernel-impl
-  pallas`` the per-wave next-token selection runs through the decode
-  argmax kernel (``repro.decode.kernel.argmax_tokens``, bit-identical
-  to ``jnp.argmax``), so the flag now covers the whole request loop —
-  prefill AND the decode hot path.
+  pallas`` the flag covers the whole request loop: prefill (flash
+  attention), the decode step's per-layer attention (the streaming
+  cache kernel in ``repro.kernels.decode_attention``, fused delta
+  variant) and the next-token selection
+  (``repro.decode.kernel.argmax_tokens``, bit-identical to
+  ``jnp.argmax``).
 * **ASR** (the paper's lstm family): requests are variable-length
   utterances; admission runs the BLSTM forward once (``--kernel-impl``
   selects the fused Pallas stack), and the decode loop streams the
@@ -62,9 +64,10 @@ def scatter_slot(pool, row, slot):
 class Server:
     def __init__(self, cfg, *, slots: int, max_len: int, seed: int = 0,
                  kernel_impl: str = "jax"):
-        # kernel_impl reaches prefill AND the decode loop's token
-        # selection (repro.decode.kernel.argmax_tokens); the decode-
-        # shaped attention kernel remains a ROADMAP.md open item
+        # kernel_impl covers the whole request loop: prefill, the decode
+        # step's attention (repro.kernels.decode_attention via
+        # models.api.decode_fn; cfg.attn_decode_impl overrides) and the
+        # token selection (repro.decode.kernel.argmax_tokens)
         assert cfg.supports_decode and cfg.family != "encdec", \
             "demo server covers decoder-only families"
         self.cfg = cfg
@@ -88,7 +91,7 @@ class Server:
                 kernel_impl=kernel_impl))
         self._jit_decode = jax.jit(
             lambda params, cache, tok, pos: self.model.decode_fn(
-                params, cache, tok, pos))
+                params, cache, tok, pos, kernel_impl=kernel_impl))
         if kernel_impl == "pallas":
             self._select = lambda row: int(DC.argmax_tokens(row[None])[0])
         else:
@@ -160,7 +163,8 @@ class AsrServer:
     """
 
     def __init__(self, cfg, *, slots: int, max_frames: int, chunk: int,
-                 beam: int = 0, seed: int = 0, kernel_impl: str = "jax"):
+                 beam: int = 0, seed: int = 0, kernel_impl: str = "jax",
+                 topc: int = None):
         from repro.models import lstm as LS
 
         self.cfg = cfg
@@ -170,7 +174,11 @@ class AsrServer:
         self.beam = beam or getattr(cfg, "beam_width", 8)
         self.semiring = getattr(cfg, "beam_semiring", "max")
         self.len_norm = getattr(cfg, "beam_len_norm", 0.0)
+        self.topc = (getattr(cfg, "beam_topc", 0) if topc is None
+                     else topc)
         self.impl = "pallas" if kernel_impl == "pallas" else "jax"
+        print(f"[decode] beam step: {self.impl} (beam {self.beam}, "
+              f"topc {self.topc or 'off'})", flush=True)
         model = build_model(cfg)
         self.params = init_spec_tree(model.param_specs(),
                                      jax.random.PRNGKey(seed))
@@ -186,7 +194,8 @@ class AsrServer:
         # fixed (state, wave, lens) shapes -> jit once, no per-wave retrace
         self._jit_decode = jax.jit(
             lambda st, wave, lens: DC.decode_chunk(
-                st, wave, lens, semiring=self.semiring, impl=self.impl))
+                st, wave, lens, semiring=self.semiring, impl=self.impl,
+                topc=self.topc))
         self._jit_finalize = jax.jit(
             lambda st: DC.finalize(st, len_norm=self.len_norm,
                                    semiring=self.semiring))
@@ -257,14 +266,20 @@ def main(argv=None):
     ap.add_argument("--kernel-impl", default="jax",
                     choices=["jax", "pallas"],
                     help="kernels for prefill/the BLSTM forward AND the "
-                         "decode loop (LM: argmax selection kernel; ASR: "
-                         "the prefix-beam inner-step kernel)")
+                         "decode loop (LM: decode-attention + argmax "
+                         "selection kernels; ASR: the prefix-beam "
+                         "inner-step kernel)")
     ap.add_argument("--chunk-frames", type=int, default=8,
                     help="ASR mode: frames decoded per wave (the "
                          "streaming chunk of the beam-state carry)")
     ap.add_argument("--beam-width", type=int, default=0,
                     help="ASR mode: CTC prefix-beam width (0 = cfg "
                          "beam_width)")
+    ap.add_argument("--beam-topc", type=int, default=-1,
+                    help="ASR mode: per-frame top-C vocab pruning of the "
+                         "beam candidate grid (0 = off, -1 = cfg "
+                         "beam_topc); exact when C covers the frame "
+                         "support (docs/decoding.md)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -311,7 +326,8 @@ def _main_asr(cfg, args):
                for i in range(args.requests)]
     server = AsrServer(cfg, slots=args.slots, max_frames=args.max_len,
                        chunk=args.chunk_frames, beam=args.beam_width,
-                       kernel_impl=args.kernel_impl)
+                       kernel_impl=args.kernel_impl,
+                       topc=None if args.beam_topc < 0 else args.beam_topc)
     finished, t0, steps, occ = [], time.time(), 0, 0.0
     frames = sum(len(f) for _, f in pending)
     while pending or server.active.any():

@@ -71,12 +71,13 @@ class Model:
                           kernel_impl=kernel_impl)
 
     def decode_fn(self, params, cache, tokens, pos, *,
-                  long_context: bool = False):
+                  long_context: bool = False, kernel_impl: str = "jax"):
         fam = self.cfg.family
         if fam == "encdec":
             return ED.decode_step(self.cfg, params, cache, tokens, pos)
         return TF.decode_step(self.cfg, params, cache, tokens, pos,
-                              long_context=long_context)
+                              long_context=long_context,
+                              kernel_impl=kernel_impl)
 
     # --------------------------------------------------------------- specs
     def cache_specs(self, shape: ShapeConfig):

@@ -6,6 +6,10 @@
   counterpart of the Pallas flash kernel in ``repro.kernels.flash_attention``
   (selected via ``impl='pallas'``).
 * ``attn_decode`` — single-token step against a KV cache (serve path).
+  ``impl='pallas'`` selects the decode-shaped streaming kernel in
+  ``repro.kernels.decode_attention`` (same masks, online softmax over
+  S-tiles); ``attn_decode_delta(impl='pallas')`` uses its fused variant
+  that folds the new-token column in without re-reading the cache.
 * cross-attention (encoder-decoder) reuses ``attn_seq`` without a mask.
 
 Sliding windows are mask-based: the per-layer window rides through the
@@ -228,10 +232,32 @@ def attn_seq(q, k, v, *, causal: bool, window=None, q_chunk: int = 512,
 # Decode step
 # ---------------------------------------------------------------------------
 
+_PALLAS_ANNOUNCED = set()
+
+
+def _announce_pallas(tag):
+    """Trace-time marker that the pallas decode-attn branch was actually
+    taken inside the jitted decode — the CI serve smoke greps for it."""
+    if tag not in _PALLAS_ANNOUNCED:
+        _PALLAS_ANNOUNCED.add(tag)
+        print(f"[attn] decode-attn path: pallas ({tag})", flush=True)
+
+
 def attn_decode(q, k_cache, v_cache, pos, *, window=None,
-                seq_shard: bool = False):
+                seq_shard: bool = False, impl: str = "jax",
+                interpret=None):
     """q: (B,1,H,E); caches: (B,S,KV,E) already containing the new token at
-    index ``pos``.  Masks out positions > pos and outside the window."""
+    index ``pos``.  Masks out positions > pos and outside the window.
+
+    impl='pallas' streams the cache through the Pallas decode kernel
+    (seq_shard stays on the jax path: the sharding constraints live
+    outside the kernel grid)."""
+    if impl == "pallas" and not seq_shard:
+        from repro.kernels.decode_attention import decode_attention
+
+        _announce_pallas("canonical")
+        return decode_attention(q, k_cache, v_cache, pos, window=window,
+                                interpret=interpret)
     if seq_shard:
         q = _gather_last(q)  # head_dim-sharded projections -> gather tiny q
     B, _, H, E = q.shape
@@ -251,7 +277,8 @@ def attn_decode(q, k_cache, v_cache, pos, *, window=None,
 
 
 def attn_decode_delta(q, k_cache, v_cache, k_new, v_new, pos, *,
-                      window=None, seq_shard: bool = False):
+                      window=None, seq_shard: bool = False,
+                      impl: str = "jax", interpret=None):
     """Decode WITHOUT writing the cache first: attend over the old cache
     (positions < pos) plus an explicit extra column for the new token.
 
@@ -260,7 +287,18 @@ def attn_decode_delta(q, k_cache, v_cache, k_new, v_new, pos, *,
     as scan outputs and written back with ONE stacked dynamic-update-slice
     per step (§Perf pair-D): decode stops depending on XLA's while-loop
     buffer aliasing for ~TB-scale cache copies.
+
+    impl='pallas' uses the fused kernel variant: the new-token column is
+    folded into the online-softmax init, so the cache is read exactly once
+    and the concat-and-resoftmax disappears.
     """
+    if impl == "pallas" and not seq_shard:
+        from repro.kernels.decode_attention import decode_attention
+
+        _announce_pallas("delta")
+        return decode_attention(q, k_cache, v_cache, pos, window=window,
+                                k_new=k_new, v_new=v_new,
+                                interpret=interpret)
     if seq_shard:
         q = _gather_last(q)
         k_new = _gather_last(k_new)

@@ -252,9 +252,13 @@ def cache_specs(cfg, batch: int, cache_len: int):
     raise ValueError(fam)
 
 
-def decode_step(cfg, params, cache, tokens, pos, *, long_context: bool = False):
+def decode_step(cfg, params, cache, tokens, pos, *, long_context: bool = False,
+                kernel_impl: str = "jax"):
     """One-token decode.  tokens: (B,1) int32, pos: scalar int32 position of
-    the new token.  Returns (logits (B,1,V), new cache)."""
+    the new token.  Returns (logits (B,1,V), new cache).
+
+    kernel_impl='pallas' routes the per-layer attention through the fused
+    Pallas decode kernel (cfg.attn_decode_impl overrides when set)."""
     fam = cfg.family
     S_cache = (cache["attn"]["k"].shape[2] if "attn" in cache
                else (1 << 30))
@@ -263,12 +267,14 @@ def decode_step(cfg, params, cache, tokens, pos, *, long_context: bool = False):
     x = embed_tokens(cfg, params, tokens)
     positions = jnp.full((tokens.shape[0], 1), pos)
     seq_shard = cfg.attn_sharding == "seq"
+    attn_impl = cfg.attn_decode_impl or kernel_impl
 
     def attn_delta(p, h, cache_l, window):
         q, k, v = A.qkv_project(cfg, p, h, h, positions, positions)
         o = A.attn_decode_delta(q, cache_l["attn"]["k"],
                                 cache_l["attn"]["v"], k, v, pos,
-                                window=window, seq_shard=seq_shard)
+                                window=window, seq_shard=seq_shard,
+                                impl=attn_impl)
         return A.out_project(p, o), {"k": k, "v": v}   # new-token rows only
 
     def layer(x, scanned):

@@ -181,6 +181,98 @@ def test_auto_block_b_decode_fits_budget():
 
 
 # ---------------------------------------------------------------------------
+# top-C vocab pruning: exactness under covering C (docs/decoding.md)
+# ---------------------------------------------------------------------------
+
+def _peaky_logits(seed, B, T, V, support):
+    """Planted-path posteriors whose per-frame support (tokens with any
+    realistic mass) is {0..support-1}: the +12 margin puts every other
+    token ~e^-12 below, so any C >= support covers the extend support
+    and the pruned search must be bit-identical to the unpruned one."""
+    rng = np.random.default_rng(seed)
+    path = rng.integers(0, support, size=(B, T)).astype(np.int32)
+    path[rng.random((B, T)) < 0.4] = 0
+    logits = rng.normal(0.0, 1.0, size=(B, T, V)).astype(np.float32)
+    logits[..., support:] -= 12.0
+    logits += 4.0 * (np.arange(V)[None, None, :] == path[:, :, None])
+    return logits
+
+
+def test_topc_scores_matches_lax_topk():
+    logp = jax.nn.log_softmax(
+        jnp.asarray(_rand_logits(3, B=5, T=1, V=33)[:, 0]), -1)
+    vals, idx = DC.topc_scores(logp, 7)
+    ref_v, ref_i = jax.lax.top_k(logp, 7)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_i))
+
+
+@pytest.mark.parametrize("semiring", ["max", "sum"])
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+@pytest.mark.parametrize("topc", [8, 31])
+def test_topc_covering_bitmatches_unpruned(semiring, impl, topc):
+    logits = _peaky_logits(5, B=4, T=18, V=32, support=6)
+    lens = _rand_lengths(5, 4, 18)
+    ref = DC.beam_search(jnp.asarray(logits), jnp.asarray(lens), beam=4,
+                         semiring=semiring)
+    out = DC.beam_search(jnp.asarray(logits), jnp.asarray(lens), beam=4,
+                         semiring=semiring, impl=impl, topc=topc)
+    for r, o in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+
+
+@pytest.mark.parametrize("semiring", ["max", "sum"])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_topc_pruned_matches_oracle(semiring, seed):
+    """Property test: the pruned beam with covering C reproduces the
+    dict-of-real-prefixes numpy oracle exactly."""
+    logits = _peaky_logits(seed, B=4, T=12, V=24, support=5)
+    hyp = DC.beam_decode(jnp.asarray(logits), beam=4, semiring=semiring,
+                         topc=8)
+    ref, _ = prefix_beam_ref(logits, beam=4, semiring=semiring)
+    assert hyp == ref
+
+
+def test_topc_chunked_streaming_bitmatches_oneshot():
+    logits = _peaky_logits(7, B=4, T=14, V=20, support=5)
+    lens = np.array([14, 6, 2, 11], np.int32)
+    ref = DC.beam_search(jnp.asarray(logits), jnp.asarray(lens), beam=4,
+                         semiring="sum", topc=8)
+    st = DC.init_state(4, 4, 14)
+    for t0 in range(0, 14, 5):
+        st = DC.decode_chunk(st, jnp.asarray(logits[:, t0:t0 + 5]),
+                             jnp.asarray(lens), semiring="sum", topc=8)
+    out = DC.finalize(st, semiring="sum")
+    for r, o in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+
+
+def test_topc_at_least_vocab_routes_unpruned():
+    """topc >= V is the unpruned path (same object-level step), so the
+    bench's C=V row is the true baseline."""
+    logits = _rand_logits(11, B=3, T=10, V=16)
+    ref = DC.beam_search(jnp.asarray(logits), beam=4, semiring="sum")
+    out = DC.beam_search(jnp.asarray(logits), beam=4, semiring="sum",
+                         topc=16)
+    for r, o in zip(ref, out):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(o))
+
+
+def test_beam_cand_bytes_scales_with_c_not_v():
+    from repro.decode.kernel import beam_cand_bytes
+
+    unpruned = beam_cand_bytes(8, 32_000)
+    pruned = beam_cand_bytes(8, 32_000, topc=64)
+    assert unpruned == (4 * 8 * 32_000 + 32_000) * 4   # legacy formula
+    assert pruned < unpruned / 4
+    # doubling vocab barely moves the pruned set (logp block only) ...
+    assert beam_cand_bytes(8, 64_000, topc=64) < 2.2 * pruned
+    # ... while block_b grows accordingly
+    assert (auto_block_b_decode(1 << 20, 8, 32_000, topc=64)
+            > 4 * auto_block_b_decode(1 << 20, 8, 32_000))
+
+
+# ---------------------------------------------------------------------------
 # streaming: chunked == one-shot, reset_rows re-arms slots
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,152 @@
+"""Decode-shaped attention: the Pallas streaming kernel vs the jax
+reference (canonical + fused delta variants, windowed masks, GQA
+grouping, S-tile-crossing cache lengths) and the delta path's
+equivalence to write-then-attend — the serving hot-path contracts of
+docs/kernels.md."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import (auto_block_s_decode,
+                                            decode_attn_vmem_bytes,
+                                            decode_attention)
+from repro.models import attention as A
+
+TOL = 2e-5          # normalized: max|pallas - jax| / max|jax|
+
+
+def _setup(seed, B, S, KV, M, E):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    H = KV * M
+    q = jax.random.normal(ks[0], (B, 1, H, E), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, KV, E), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, KV, E), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, 1, KV, E), jnp.float32)
+    vn = jax.random.normal(ks[4], (B, 1, KV, E), jnp.float32)
+    return q, kc, vc, kn, vn
+
+
+def _norm_err(out, ref):
+    return float(jnp.max(jnp.abs(out - ref)) / jnp.max(jnp.abs(ref)))
+
+
+# ---------------------------------------------------------------------------
+# delta == write-then-attend (jax vs jax), windowed + GQA
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 5, 48])
+@pytest.mark.parametrize("M", [1, 4])
+def test_delta_matches_write_then_attend(window, M):
+    """attn_decode_delta(old cache, new column) must equal writing the
+    new token first and running attn_decode over the updated cache —
+    including the strict t < pos old-position mask under a window."""
+    B, S, KV, E = 2, 48, 2, 8
+    q, kc, vc, kn, vn = _setup(0, B, S, KV, M, E)
+    for pos in (0, 3, S - 1):
+        pos = jnp.int32(pos)
+        delta = A.attn_decode_delta(q, kc, vc, kn, vn, pos, window=window)
+        kc2 = A.update_cache(kc, kn, pos)
+        vc2 = A.update_cache(vc, vn, pos)
+        ref = A.attn_decode(q, kc2, vc2, pos, window=window)
+        np.testing.assert_allclose(np.asarray(delta), np.asarray(ref),
+                                   rtol=0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel vs jax reference (<= 2e-5 normalized)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,block_s", [(40, 16), (33, 16), (64, 16),
+                                       (16, 16), (136, 64)])
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("M", [1, 4])
+def test_pallas_matches_attn_decode(S, block_s, window, M):
+    """S values that cross (and raggedly overhang) the S-tile grid."""
+    B, KV, E = 2, 2, 8
+    q, kc, vc, _, _ = _setup(1, B, S, KV, M, E)
+    for pos in (0, S // 2, S - 1):
+        pos = jnp.int32(pos)
+        ref = A.attn_decode(q, kc, vc, pos, window=window)
+        out = decode_attention(q, kc, vc, pos, window=window,
+                               block_s=block_s, interpret=True)
+        assert _norm_err(out, ref) <= TOL, (S, window, M, int(pos))
+
+
+@pytest.mark.parametrize("S,block_s", [(40, 16), (33, 16), (136, 64)])
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("M", [1, 4])
+def test_pallas_matches_attn_decode_delta(S, block_s, window, M):
+    B, KV, E = 2, 2, 8
+    q, kc, vc, kn, vn = _setup(2, B, S, KV, M, E)
+    for pos in (0, S // 2, S - 1):
+        pos = jnp.int32(pos)
+        ref = A.attn_decode_delta(q, kc, vc, kn, vn, pos, window=window)
+        out = decode_attention(q, kc, vc, pos, window=window, k_new=kn,
+                               v_new=vn, block_s=block_s, interpret=True)
+        assert _norm_err(out, ref) <= TOL, (S, window, M, int(pos))
+
+
+def test_impl_dispatch_and_traced_scalars():
+    """attn_decode(impl='pallas') under jit with TRACED pos and window
+    (the decode_step regime: the per-layer window rides the layer scan
+    as data) matches the jax path."""
+    B, S, KV, M, E = 2, 40, 2, 4, 8
+    q, kc, vc, kn, vn = _setup(3, B, S, KV, M, E)
+
+    @jax.jit
+    def pal(pos, win):
+        return (A.attn_decode(q, kc, vc, pos, window=win, impl="pallas"),
+                A.attn_decode_delta(q, kc, vc, kn, vn, pos, window=win,
+                                    impl="pallas"))
+
+    for pos, win in ((20, 6), (39, 2 ** 30), (0, 1)):
+        pos, win = jnp.int32(pos), jnp.int32(win)
+        out_c, out_d = pal(pos, win)
+        ref_c = A.attn_decode(q, kc, vc, pos, window=win)
+        ref_d = A.attn_decode_delta(q, kc, vc, kn, vn, pos, window=win)
+        assert _norm_err(out_c, ref_c) <= TOL
+        assert _norm_err(out_d, ref_d) <= TOL
+
+
+def test_auto_block_s_and_vmem_accounting():
+    """The resident set never depends on S: longer caches only add
+    tiles, and auto_block_s_decode keeps the set inside the budget."""
+    M, E = 4, 128
+    bs_small = auto_block_s_decode(256, M, E)
+    bs_huge = auto_block_s_decode(1 << 20, M, E)
+    assert bs_huge <= 512
+    assert decode_attn_vmem_bytes(bs_huge, M, E) \
+        == decode_attn_vmem_bytes(bs_huge, M, E)  # pure in block_s/M/E
+    assert decode_attn_vmem_bytes(bs_small, M, E) <= 12 * 2 ** 20
+    tight = auto_block_s_decode(1 << 20, M, E, vmem_budget=64 * 1024)
+    assert tight < bs_huge
+    assert decode_attn_vmem_bytes(tight, M, E) <= 64 * 1024 \
+        or tight == 8                              # floor
+
+
+# ---------------------------------------------------------------------------
+# model level: decode_fn(kernel_impl='pallas') on a windowed GQA stack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "hymba-1.5b"])
+def test_decode_step_kernel_impl_parity(arch):
+    """End-to-end decode_fn: jax vs pallas attention must agree within
+    bf16 cache noise (hymba: heterogeneous traced windows + GQA)."""
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.sharding import init_spec_tree
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = init_spec_tree(model.param_specs(), jax.random.PRNGKey(0))
+    B, P = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
+    _, cache = model.prefill_fn(params, {"tokens": toks}, cache_len=24)
+    out = {}
+    for impl in ("jax", "pallas"):
+        lg, _ = model.decode_fn(params, cache, toks[:, -1:], jnp.int32(P),
+                                kernel_impl=impl)
+        out[impl] = lg.astype(jnp.float32)
+    err = _norm_err(out["pallas"], out["jax"])
+    assert err <= 2e-2, err                         # bf16 cache regime
