@@ -32,6 +32,7 @@ def all_benches():
         ("decode_microbench", _decode_microbench),
         ("decode_wer", T.bench_decode_wer),
         ("serve_microbench", _serve_microbench),
+        ("load_capacity", _load_capacity),
     ]
 
 
@@ -574,19 +575,102 @@ def _serve_microbench():
     return rows
 
 
+def _load_capacity():
+    """The closed-loop capacity report (``--only load``): for each
+    (mode × kernel-impl × beam-topc) serving cell, bisect the max
+    sustained QPS whose p99 first-token latency stays under the target
+    (``repro.serving.sustained_capacity`` — docs/serving.md §Capacity
+    report), and emit the SLO percentiles measured at that rate.
+
+    Each probe replays the SAME seeded workload shape at a candidate
+    arrival rate through a real server (real prefill/forward + decode
+    compute; reduced shapes) in *virtual time*: per-operation service
+    times come from a :class:`CostModel` pinned per cell (nominal
+    scenarios — faster nominal decode for the pallas cells — NOT
+    measured wall times), so the whole report is a pure function of the
+    seed and reruns bit-identically row-for-row.  ``--wall`` runs of
+    ``repro.launch.load`` are the measured counterpart."""
+    import dataclasses
+
+    from repro.configs import get_arch
+    from repro.launch.serve import AsrServer, Server
+    from repro.serving import (CostModel, Workload, make_payload,
+                               sustained_capacity)
+
+    P99_TARGET_S = 0.25
+    SLOTS, MAX_LEN = 2, 24
+    lm_cfg = get_arch("smollm-360m").reduced()
+    asr_cfg = dataclasses.replace(get_arch("swb2000-blstm").reduced(),
+                                  n_layers=1, lstm_hidden=32,
+                                  lstm_bottleneck=16, input_dim=16,
+                                  vocab=32, beam_width=3)
+
+    def lm_server(impl):
+        return Server(lm_cfg, slots=SLOTS, max_len=MAX_LEN,
+                      kernel_impl=impl)
+
+    def asr_server(impl, topc):
+        return AsrServer(asr_cfg, slots=SLOTS, max_frames=MAX_LEN,
+                         chunk=8, beam=3, kernel_impl=impl, topc=topc)
+
+    # (cell, mode, server factory, nominal cost model, bisection iters):
+    # pallas cells get a faster nominal decode wave (the kernels' point)
+    # and fewer probes — interpret-mode compute is slow on CPU
+    cells = [
+        ("lm/jax", "lm", lambda: lm_server("jax"),
+         CostModel(admit_s=0.080, wave_base_s=0.040, per_work_s=1e-3), 3),
+        ("lm/pallas", "lm", lambda: lm_server("pallas"),
+         CostModel(admit_s=0.056, wave_base_s=0.024, per_work_s=5e-4), 2),
+        ("asr/jax/topc0", "asr", lambda: asr_server("jax", 0),
+         CostModel(admit_s=0.060, wave_base_s=0.040, per_work_s=1e-3), 3),
+        ("asr/jax/topc8", "asr", lambda: asr_server("jax", 8),
+         CostModel(admit_s=0.060, wave_base_s=0.024, per_work_s=5e-4), 3),
+        ("asr/pallas/topc8", "asr", lambda: asr_server("pallas", 8),
+         CostModel(admit_s=0.044, wave_base_s=0.014, per_work_s=2.5e-4), 2),
+    ]
+
+    rows = []
+    for cell, mode, mk, cost, iters in cells:
+        cfg = lm_cfg if mode == "lm" else asr_cfg
+        w = Workload(qps=1.0, horizon=6.0, seed=0, len_median=8.0,
+                     len_min=2, len_max=MAX_LEN - 1, patience=2.0,
+                     deadline=1.0, max_new=6)
+        payload_fn = lambda req: make_payload(
+            req, mode=mode, vocab=cfg.vocab, input_dim=cfg.input_dim,
+            seed=w.seed)
+        q, s = sustained_capacity(mk(), w, payload_fn,
+                                  p99_target_s=P99_TARGET_S,
+                                  qps_lo=0.5, qps_hi=16.0, iters=iters,
+                                  cost=cost)
+        rows.append((f"load/max_qps/{cell}", q,
+                     f"max sustained QPS at p99 first-token <= "
+                     f"{P99_TARGET_S}s, virtual time, seed {w.seed}"))
+        for metric in ("first_token", "final"):
+            for pq, v in s[metric].items():
+                rows.append((f"load/{metric}_{pq}/{cell}", v,
+                             f"{metric} {pq} at max QPS, virtual s"))
+        rows.append((f"load/done/{cell}", s["done"],
+                     f"of {s['offered']} offered at max QPS "
+                     f"({s['abandoned']} abandoned, "
+                     f"{s['preemptions']} preemptions)"))
+    return rows
+
+
 def main(argv=None) -> None:
+    from repro.serving.slo import print_csv_rows
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     args = ap.parse_args(argv)
 
-    print("name,value,derived")
+    # the shared name,value,derived schema (repro.serving.slo)
+    print_csv_rows([], header=True)
     failures = 0
     for name, fn in all_benches():
         if args.only and args.only not in name:
             continue
         try:
-            for row_name, val, derived in fn():
-                print(f"{row_name},{val:.6g},{derived}", flush=True)
+            print_csv_rows(fn())
         except Exception as e:
             failures += 1
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

@@ -9,8 +9,10 @@ from repro.decode.beam import (  # noqa: F401
     beam_search,
     decode_chunk,
     finalize,
+    gather_rows,
     init_state,
     reset_rows,
+    scatter_rows,
     topc_scores,
 )
 from repro.decode.kernel import (  # noqa: F401

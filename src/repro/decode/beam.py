@@ -125,6 +125,24 @@ def init_state(batch: int, beam: int, max_len: int) -> BeamState:
     )
 
 
+def gather_rows(state: BeamState, idx) -> BeamState:
+    """Snapshot beam rows ``idx`` (N,) as a BeamState with batch N — the
+    serving preemption snapshot (``launch/serve.py`` parks a preempted
+    slot's beams host-side and :func:`scatter_rows` re-arms them in
+    whatever slot the request resumes in, bit-for-bit)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return BeamState(*(arr[idx] for arr in state))
+
+
+def scatter_rows(state: BeamState, rows: BeamState, idx) -> BeamState:
+    """Write snapshot ``rows`` (batch N) back into rows ``idx`` (N,) of
+    ``state`` — the inverse of :func:`gather_rows`: gather-then-scatter
+    through the same indices is the identity."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return BeamState(*(arr.at[idx].set(jnp.asarray(src, arr.dtype))
+                       for arr, src in zip(state, rows)))
+
+
 def reset_rows(state: BeamState, mask) -> BeamState:
     """Re-arm rows where ``mask`` (B,) is True (serving slot admission)."""
     B, K, U = state.tokens.shape

@@ -255,8 +255,9 @@ def main(argv=None):
         seed=args.seed, kernel_impl=args.kernel_impl,
         blank=args.blank, decode_chunk=args.decode_chunk)
 
+    from repro.serving.slo import print_csv_rows
+
     tag = f"evaluate/{strategy.name}"
-    print("name,value,derived")
     rows = [
         (f"{tag}/fer", m["fer"], f"masked frame error rate, step {step}"),
         (f"{tag}/ter_greedy", m["ter_greedy"],
@@ -270,8 +271,8 @@ def main(argv=None):
         (f"{tag}/beam_occupancy", m["beam_occupancy"],
          "live beam slots / beam width"),
     ]
-    for name, val, derived in rows:
-        print(f"{name},{val:.6g},{derived}", flush=True)
+    # the shared name,value,derived schema (repro.serving.slo)
+    print_csv_rows(rows, header=True)
 
 
 if __name__ == "__main__":

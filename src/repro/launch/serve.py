@@ -20,9 +20,18 @@ advance all active slots together, free and refill on completion):
   the slot pool IS the decode carry, advanced ``--chunk-frames`` frames
   per wave (docs/decoding.md).
 
-Both loops print the shared throughput convention of
-``launch/evaluate.py``: decoded tokens/s and occupancy (slot-pool
-occupancy for LM, live-beam-slot fraction for ASR).
+Both servers implement the multi-tenant slot-pool duck contract of
+``repro.serving`` (docs/serving.md): ``admit``/``submit`` return a
+*typed* :class:`~repro.serving.admission.AdmitResult` (``pool_full`` is
+retryable; ``prompt_too_long``/``no_budget`` are terminal),
+``preempt``/``restore`` snapshot a running request's full decode state
+(LM: the cache row; ASR: the :class:`~repro.decode.BeamState` row via
+``gather_rows``/``scatter_rows``) so a preempted-then-resumed request
+decodes bit-for-bit identically to an uninterrupted one, ``step_wave``
+reports per-wave progress for SLO accounting, and every slot
+transition lands in ``server.events`` as a structured per-request
+event instead of an ad-hoc stats line.  ``repro.launch.load`` drives
+these servers through seeded traffic with SLO accounting.
 
 PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
     --requests 6 --slots 2 --max-new 16
@@ -43,6 +52,8 @@ from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_local_mesh, rules_for
 from repro.models import build_model
+from repro.serving.admission import (NO_BUDGET, OK, POOL_FULL,
+                                     PROMPT_TOO_LONG, AdmitResult)
 from repro.sharding import ParamSpec, init_spec_tree
 
 
@@ -61,29 +72,77 @@ def scatter_slot(pool, row, slot):
     return jax.tree.map(one, pool, row)
 
 
-class Server:
+def scatter_slots(pool, rows, slots):
+    """Write gathered cache rows (batch = len(slots)) back into the
+    (possibly non-contiguous) pool slots — the batched-wave counterpart
+    of :func:`scatter_slot`."""
+    idx = jnp.asarray(slots, jnp.int32)
+    return jax.tree.map(
+        lambda dst, src: dst.at[:, idx].set(src.astype(dst.dtype)),
+        pool, rows)
+
+
+class _SlotPool:
+    """Shared slot-pool bookkeeping: typed admission helpers, the
+    structured per-request event stream, and the rid -> slot map."""
+
+    emits_on_admit = False
+
+    def __init__(self, slots: int, verbose: bool = False):
+        self.slots = slots
+        self.active = np.zeros(slots, bool)
+        self.req_ids = [-1] * slots
+        self.events = []
+        self.verbose = verbose
+
+    def _event(self, kind: str, rid: int, **kw):
+        self.events.append((kind, rid, kw))
+        if self.verbose:
+            extra = "".join(f" {k}={v}" for k, v in kw.items())
+            print(f"[req] {kind} rid={rid}{extra}", flush=True)
+
+    def _free_slot(self):
+        free = np.where(~self.active)[0]
+        return int(free[0]) if len(free) else -1
+
+    def _slot_of(self, rid: int) -> int:
+        for slot in np.where(self.active)[0]:
+            if self.req_ids[slot] == rid:
+                return int(slot)
+        raise KeyError(f"request {rid} is not active in the pool")
+
+    def active_requests(self):
+        return [self.req_ids[s] for s in np.where(self.active)[0]]
+
+
+class Server(_SlotPool):
+    """LM continuous batching over a stacked KV/SSM cache."""
+
+    emits_on_admit = True      # prefill emits the first token at admission
+
     def __init__(self, cfg, *, slots: int, max_len: int, seed: int = 0,
-                 kernel_impl: str = "jax"):
+                 kernel_impl: str = "jax", batched: bool = True,
+                 verbose: bool = False):
         # kernel_impl covers the whole request loop: prefill, the decode
         # step's attention (repro.kernels.decode_attention via
         # models.api.decode_fn; cfg.attn_decode_impl overrides) and the
         # token selection (repro.decode.kernel.argmax_tokens)
         assert cfg.supports_decode and cfg.family != "encdec", \
             "demo server covers decoder-only families"
+        super().__init__(slots, verbose)
         self.cfg = cfg
         self.model = build_model(cfg)
-        self.slots = slots
         self.max_len = max_len
+        self.batched = batched
         self.params = init_spec_tree(self.model.param_specs(),
                                      jax.random.PRNGKey(seed))
         shape = ShapeConfig("serve", max_len, slots, "decode")
-        self.cache = zeros_from_specs(self.model.cache_specs(shape))
+        self._cache_specs = self.model.cache_specs(shape)
+        self.cache = zeros_from_specs(self._cache_specs)
         self.pos = np.zeros(slots, np.int32)          # next write position
-        self.active = np.zeros(slots, bool)
         self.tokens = np.zeros((slots, 1), np.int32)  # last emitted token
         self.budget = np.zeros(slots, np.int32)
         self.outputs = [[] for _ in range(slots)]
-        self.req_ids = [-1] * slots
 
         self._jit_prefill = jax.jit(
             lambda params, batch: self.model.prefill_fn(
@@ -98,19 +157,25 @@ class Server:
             self._select = lambda row: int(jnp.argmax(row))
 
     # ------------------------------------------------------------------
-    def admit(self, req_id: int, prompt: np.ndarray, max_new: int) -> bool:
-        free = np.where(~self.active)[0]
-        if len(free) == 0:
-            return False
-        slot = int(free[0])
+    def admit(self, req_id: int, prompt: np.ndarray,
+              max_new: int) -> AdmitResult:
+        """Claim a free slot, prefill, emit the first token.  Typed
+        rejection: ``pool_full`` (retryable), ``prompt_too_long`` (the
+        cache write position must stay inside the slot's max_len row,
+        one position reserved for the first generated token) or
+        ``no_budget`` (max_new <= 0) — each is a distinct cause, not a
+        silent False."""
         prompt = np.asarray(prompt)
-        # clamp to the most recent max_len-1 tokens: the cache write
-        # position must stay inside the slot's max_len cache row, and one
-        # position is reserved for the first generated token (floor of 1
-        # token — a -0 slice would keep the whole prompt)
-        keep = max(self.max_len - 1, 1)
-        if len(prompt) > keep:
-            prompt = prompt[-keep:]
+        if len(prompt) > self.max_len - 1:
+            self._event("reject", req_id, reason=PROMPT_TOO_LONG,
+                        prompt=len(prompt))
+            return AdmitResult(PROMPT_TOO_LONG)
+        if max_new <= 0:
+            self._event("reject", req_id, reason=NO_BUDGET)
+            return AdmitResult(NO_BUDGET)
+        slot = self._free_slot()
+        if slot < 0:
+            return AdmitResult(POOL_FULL)
         logits, row_cache = self._jit_prefill(
             self.params, {"tokens": jnp.asarray(prompt[None, :])})
         self.cache = scatter_slot(self.cache, row_cache, slot)
@@ -121,35 +186,121 @@ class Server:
         self.budget[slot] = max_new - 1
         self.outputs[slot] = [nxt]
         self.req_ids[slot] = req_id
-        return True
+        self._event("admit", req_id, slot=slot, prompt=len(prompt))
+        return AdmitResult(OK, slot)
 
+    # ----------------------------------------------------- duck contract
+    def submit(self, req, payload) -> AdmitResult:
+        return self.admit(req.rid, payload, req.max_new)
+
+    def step_wave(self):
+        """One decode wave: ``(completed, progressed_rids, work)`` —
+        every active slot advances one token, so work = active count."""
+        progressed = self.active_requests()
+        done = self.step()
+        return done, progressed, len(progressed)
+
+    def preempt(self, rid: int):
+        """Evict ``rid``: snapshot its cache row (host-side) plus the
+        position/budget/output bookkeeping, free the slot."""
+        slot = self._slot_of(rid)
+        snap = {
+            "rid": rid,
+            "pos": int(self.pos[slot]),
+            "token": int(self.tokens[slot, 0]),
+            "budget": int(self.budget[slot]),
+            "outputs": list(self.outputs[slot]),
+            "row": jax.tree.map(lambda c: np.asarray(c[:, slot:slot + 1]),
+                                self.cache),
+        }
+        self.active[slot] = False
+        self.req_ids[slot] = -1
+        self._event("preempt", rid, slot=slot, pos=snap["pos"])
+        return snap
+
+    def restore(self, snap) -> AdmitResult:
+        """Resume a preempted request in any free slot — the cache row
+        round-trips exactly, so the continued decode is bit-for-bit the
+        uninterrupted one."""
+        slot = self._free_slot()
+        if slot < 0:
+            return AdmitResult(POOL_FULL)
+        row = jax.tree.map(jnp.asarray, snap["row"])
+        self.cache = scatter_slot(self.cache, row, slot)
+        self.pos[slot] = snap["pos"]
+        self.tokens[slot, 0] = snap["token"]
+        self.budget[slot] = snap["budget"]
+        self.outputs[slot] = list(snap["outputs"])
+        self.active[slot] = True
+        self.req_ids[slot] = snap["rid"]
+        self._event("restore", snap["rid"], slot=slot, pos=snap["pos"])
+        return AdmitResult(OK, slot)
+
+    def reset(self):
+        """Clear every slot (jitted executables survive — the capacity
+        search replays many traffic levels on one server)."""
+        self.cache = jax.tree.map(jnp.zeros_like, self.cache)
+        self.pos[:] = 0
+        self.active[:] = False
+        self.tokens[:] = 0
+        self.budget[:] = 0
+        self.outputs = [[] for _ in range(self.slots)]
+        self.req_ids = [-1] * self.slots
+        self.events.clear()
+
+    # ------------------------------------------------------------------
     def step(self):
         """Advance every active slot by one token.
 
-        Slots share one jitted decode at a common position frontier: the
-        cache write position differs per slot, so we decode sequentially per
-        unique position group (at reduced scale groups are tiny; production
-        serving aligns positions per wave).
-        """
+        Slots share one jitted decode at a common position frontier:
+        the cache write position differs per slot, so slots are grouped
+        by position and each group decodes as ONE batched call (gather
+        rows -> decode -> scatter back) — bit-identical to the
+        sequential per-slot decode (parity-tested), with
+        ``batched=False`` keeping the reference loop."""
+        if not self.batched:
+            return self._step_sequential()
+        done = []
+        active = np.where(self.active)[0]
+        for p in sorted({int(self.pos[s]) for s in active}):
+            group = np.array([s for s in active if self.pos[s] == p],
+                             np.int32)
+            toks = jnp.asarray(self.tokens[group])
+            rows = jax.tree.map(lambda c: c[:, group], self.cache)
+            logits, rows = self._jit_decode(self.params, rows, toks,
+                                            jnp.int32(p))
+            self.cache = scatter_slots(self.cache, rows, group)
+            for i, slot in enumerate(map(int, group)):
+                self._advance_slot(slot, logits[i, -1], done)
+        return done
+
+    def _step_sequential(self):
         done = []
         for slot in np.where(self.active)[0]:
+            slot = int(slot)
             tok = jnp.asarray(self.tokens[slot:slot + 1])
             row = jax.tree.map(lambda c: c[:, slot:slot + 1], self.cache)
             logits, row = self._jit_decode(self.params, row, tok,
                                            jnp.int32(int(self.pos[slot])))
-            self.cache = scatter_slot(self.cache, row, int(slot))
-            nxt = self._select(logits[0, -1])
-            self.outputs[slot].append(nxt)
-            self.tokens[slot, 0] = nxt
-            self.pos[slot] += 1
-            self.budget[slot] -= 1
-            if self.budget[slot] <= 0 or self.pos[slot] >= self.max_len - 1:
-                self.active[slot] = False
-                done.append((self.req_ids[slot], list(self.outputs[slot])))
+            self.cache = scatter_slot(self.cache, row, slot)
+            self._advance_slot(slot, logits[0, -1], done)
         return done
 
+    def _advance_slot(self, slot: int, logit_row, done):
+        nxt = self._select(logit_row)
+        self.outputs[slot].append(nxt)
+        self.tokens[slot, 0] = nxt
+        self.pos[slot] += 1
+        self.budget[slot] -= 1
+        if self.budget[slot] <= 0 or self.pos[slot] >= self.max_len - 1:
+            self.active[slot] = False
+            rid = self.req_ids[slot]
+            done.append((rid, list(self.outputs[slot])))
+            self._event("done", rid, slot=slot,
+                        tokens=len(self.outputs[slot]))
 
-class AsrServer:
+
+class AsrServer(_SlotPool):
     """Streaming-ASR slot pool for the paper's acoustic model.
 
     Admission runs the BLSTM forward once over the utterance (masked to
@@ -160,15 +311,18 @@ class AsrServer:
     streaming carry, per-slot frame counters freeze exhausted rows, and
     ``reset_rows`` re-arms a slot on admission.  Completion = all valid
     frames consumed; the hypothesis is the finalized best beam entry.
+    Preemption snapshots the slot's beam row
+    (``decode.gather_rows``/``scatter_rows``) plus its parked
+    posteriors, so resume continues the identical beam trajectory.
     """
 
     def __init__(self, cfg, *, slots: int, max_frames: int, chunk: int,
                  beam: int = 0, seed: int = 0, kernel_impl: str = "jax",
-                 topc: int = None):
+                 topc: int = None, verbose: bool = False):
         from repro.models import lstm as LS
 
+        super().__init__(slots, verbose)
         self.cfg = cfg
-        self.slots = slots
         self.max_frames = max_frames
         self.chunk = chunk
         self.beam = beam or getattr(cfg, "beam_width", 8)
@@ -188,8 +342,6 @@ class AsrServer:
         self.logits = np.zeros((slots, max_frames, cfg.vocab), np.float32)
         self.lens = np.zeros(slots, np.int32)     # valid frames per slot
         self.pos = np.zeros(slots, np.int32)      # frames consumed
-        self.active = np.zeros(slots, bool)
-        self.req_ids = [-1] * slots
         self.state = DC.init_state(slots, self.beam, max_frames)
         # fixed (state, wave, lens) shapes -> jit once, no per-wave retrace
         self._jit_decode = jax.jit(
@@ -201,13 +353,21 @@ class AsrServer:
                                    semiring=self.semiring))
         self._jit_occ = jax.jit(DC.beam_occupancy)
 
-    def admit(self, req_id: int, feats: np.ndarray) -> bool:
-        free = np.where(~self.active)[0]
-        if len(free) == 0:
-            return False
-        slot = int(free[0])
-        feats = np.asarray(feats, np.float32)[:self.max_frames]
+    def admit(self, req_id: int, feats: np.ndarray) -> AdmitResult:
+        """Typed admission: ``pool_full`` (retryable), ``prompt_too_long``
+        (more frames than the slot's posterior buffer) or ``no_budget``
+        (an empty utterance has nothing to decode)."""
+        feats = np.asarray(feats, np.float32)
         n = len(feats)
+        if n > self.max_frames:
+            self._event("reject", req_id, reason=PROMPT_TOO_LONG, frames=n)
+            return AdmitResult(PROMPT_TOO_LONG)
+        if n == 0:
+            self._event("reject", req_id, reason=NO_BUDGET)
+            return AdmitResult(NO_BUDGET)
+        slot = self._free_slot()
+        if slot < 0:
+            return AdmitResult(POOL_FULL)
         padded = np.zeros((1, self.max_frames, feats.shape[-1]), np.float32)
         padded[0, :n] = feats
         logits = self._jit_fwd(self.params, jnp.asarray(padded),
@@ -220,8 +380,71 @@ class AsrServer:
         mask = np.zeros(self.slots, bool)
         mask[slot] = True
         self.state = DC.reset_rows(self.state, jnp.asarray(mask))
-        return True
+        self._event("admit", req_id, slot=slot, frames=n)
+        return AdmitResult(OK, slot)
 
+    # ----------------------------------------------------- duck contract
+    def submit(self, req, payload) -> AdmitResult:
+        return self.admit(req.rid, payload)
+
+    def step_wave(self):
+        """One decode wave: ``(completed, progressed_rids, work)`` with
+        work = valid frames consumed across the pool this wave."""
+        active = np.where(self.active)[0]
+        progressed = [self.req_ids[s] for s in active]
+        work = int(np.minimum(
+            self.chunk,
+            np.maximum(self.lens[active] - self.pos[active], 0)).sum())
+        done, _ = self.step()
+        return done, progressed, work
+
+    def preempt(self, rid: int):
+        """Evict ``rid``: snapshot its beam row + parked posteriors,
+        freeze the vacated row (lens = 0 so ``state.t >= lens``), free
+        the slot."""
+        slot = self._slot_of(rid)
+        snap = {
+            "rid": rid,
+            "logits": self.logits[slot].copy(),
+            "len": int(self.lens[slot]),
+            "pos": int(self.pos[slot]),
+            "beam": jax.tree.map(np.asarray,
+                                 DC.gather_rows(self.state, [slot])),
+        }
+        self.active[slot] = False
+        self.req_ids[slot] = -1
+        self.lens[slot] = 0        # freezes the stale beam row
+        self.pos[slot] = 0
+        self._event("preempt", rid, slot=slot, pos=snap["pos"])
+        return snap
+
+    def restore(self, snap) -> AdmitResult:
+        """Resume in any free slot: scatter the beam row back
+        (``decode.scatter_rows``) — the continued chunked decode is
+        bit-identical to the uninterrupted stream (BeamState contract,
+        docs/decoding.md)."""
+        slot = self._free_slot()
+        if slot < 0:
+            return AdmitResult(POOL_FULL)
+        self.logits[slot] = snap["logits"]
+        self.lens[slot] = snap["len"]
+        self.pos[slot] = snap["pos"]
+        self.state = DC.scatter_rows(self.state, snap["beam"], [slot])
+        self.active[slot] = True
+        self.req_ids[slot] = snap["rid"]
+        self._event("restore", snap["rid"], slot=slot, pos=snap["pos"])
+        return AdmitResult(OK, slot)
+
+    def reset(self):
+        self.logits[:] = 0.0
+        self.lens[:] = 0
+        self.pos[:] = 0
+        self.active[:] = False
+        self.req_ids = [-1] * self.slots
+        self.state = DC.init_state(self.slots, self.beam, self.max_frames)
+        self.events.clear()
+
+    # ------------------------------------------------------------------
     def step(self):
         """Advance every active slot by one chunk of frames.  Returns
         ``[(req_id, tokens), ...]`` for slots that finished and
@@ -245,8 +468,10 @@ class AsrServer:
             toks = np.asarray(toks)
             for slot in finished:
                 hyp = list(map(int, toks[slot][:int(lens[slot])]))
-                done.append((self.req_ids[slot], hyp))
+                rid = self.req_ids[slot]
+                done.append((rid, hyp))
                 self.active[slot] = False
+                self._event("done", rid, slot=int(slot), tokens=len(hyp))
         return done, occ
 
 
@@ -258,7 +483,7 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16,
                     help="prompt tokens (LM) / nominal utterance frames "
-                         "(ASR) per request")
+                         "(ASR) per request (clamped to --max-len)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64,
                     help="cache capacity (LM) / max utterance frames "
@@ -269,6 +494,10 @@ def main(argv=None):
                          "decode loop (LM: decode-attention + argmax "
                          "selection kernels; ASR: the prefix-beam "
                          "inner-step kernel)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="LM mode: decode active slots one at a time "
+                         "instead of batching equal-position groups "
+                         "(the bit-identical reference path)")
     ap.add_argument("--chunk-frames", type=int, default=8,
                     help="ASR mode: frames decoded per wave (the "
                          "streaming chunk of the beam-state carry)")
@@ -290,15 +519,19 @@ def main(argv=None):
 
     rng = np.random.default_rng(0)
     server = Server(cfg, slots=args.slots, max_len=args.max_len,
-                    kernel_impl=args.kernel_impl)
-    pending = [(i, rng.integers(0, cfg.vocab, size=args.prompt_len))
+                    kernel_impl=args.kernel_impl,
+                    batched=not args.sequential, verbose=True)
+    plen = min(args.prompt_len, args.max_len - 1)
+    pending = [(i, rng.integers(0, cfg.vocab, size=plen))
                for i in range(args.requests)]
     finished, t0, steps, occ = [], time.time(), 0, 0.0
     while pending or server.active.any():
-        while pending and server.admit(pending[0][0], pending[0][1],
-                                       args.max_new):
-            print(f"admitted request {pending[0][0]}")
-            pending.pop(0)
+        while pending:
+            res = server.admit(pending[0][0], pending[0][1], args.max_new)
+            if res.reason == POOL_FULL:
+                break
+            pending.pop(0)      # admitted or terminally rejected (event
+            # stream carries the per-request outcome either way)
         occ += server.active.mean()
         finished += server.step()
         steps += 1
@@ -327,13 +560,15 @@ def _main_asr(cfg, args):
     server = AsrServer(cfg, slots=args.slots, max_frames=args.max_len,
                        chunk=args.chunk_frames, beam=args.beam_width,
                        kernel_impl=args.kernel_impl,
-                       topc=None if args.beam_topc < 0 else args.beam_topc)
+                       topc=None if args.beam_topc < 0 else args.beam_topc,
+                       verbose=True)
     finished, t0, steps, occ = [], time.time(), 0, 0.0
     frames = sum(len(f) for _, f in pending)
     while pending or server.active.any():
-        while pending and server.admit(pending[0][0], pending[0][1]):
-            print(f"admitted request {pending[0][0]} "
-                  f"({len(pending[0][1])} frames)")
+        while pending:
+            res = server.admit(*pending[0])
+            if res.reason == POOL_FULL:
+                break
             pending.pop(0)
         done, wave_occ = server.step()
         finished += done

@@ -1,0 +1,699 @@
+"""Multi-tenant serving layer tests (docs/serving.md).
+
+Everything runs in VIRTUAL time — no wall-clock sleeps anywhere; the
+only real compute is the reduced-model prefill/decode of the slot-pool
+servers.  The controller/loop/capacity tests run on a deterministic
+in-memory FakeServer so the scheduling semantics are tested in
+milliseconds, and the bit-exactness contracts (batched-vs-sequential
+step, preempt-then-resume) run on the real servers.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.serving import (CostModel, Recorder, ServingLoop, VirtualClock,
+                           Workload, generate_trace, make_payload,
+                           percentile, rate_at, summarize, summary_rows,
+                           sustained_capacity)
+from repro.serving.admission import (NO_BUDGET, OK, POOL_FULL,
+                                     PROMPT_TOO_LONG, AdmissionController,
+                                     AdmitResult)
+from repro.serving.capacity import feasible, run_level
+from repro.serving.slo import csv_row
+from repro.serving.workload import Request
+
+
+def _lm_cfg():
+    return get_arch("smollm-360m").reduced()
+
+
+def _asr_cfg():
+    return dataclasses.replace(
+        get_arch("swb2000-blstm").reduced(), n_layers=1, lstm_hidden=32,
+        lstm_bottleneck=16, input_dim=16, vocab=32, beam_width=3)
+
+
+# ---------------------------------------------------------------------------
+# workload: seeded determinism, rate, validation
+# ---------------------------------------------------------------------------
+
+class TestWorkload:
+    def test_trace_deterministic(self):
+        w = Workload(qps=3.0, horizon=20.0, seed=11, diurnal_amp=0.4,
+                     diurnal_period=10.0)
+        a, b = generate_trace(w), generate_trace(w)
+        assert a == b
+        assert len(a) > 0
+        assert all(a[i].arrival <= a[i + 1].arrival
+                   for i in range(len(a) - 1))
+        assert [r.rid for r in a] == list(range(len(a)))
+
+    def test_seed_sensitivity(self):
+        w = Workload(qps=3.0, horizon=20.0, seed=0)
+        assert generate_trace(w) != generate_trace(
+            dataclasses.replace(w, seed=1))
+
+    def test_empirical_rate_matches_lambda(self):
+        qps, horizon = 5.0, 200.0
+        n = len(generate_trace(Workload(qps=qps, horizon=horizon, seed=3)))
+        mean = qps * horizon
+        assert abs(n - mean) < 4 * math.sqrt(mean)   # ~4 sigma
+
+    def test_diurnal_thinning_preserves_mean_rate(self):
+        # modulation reshapes arrivals in time but keeps the mean rate
+        w = Workload(qps=5.0, horizon=200.0, seed=3, diurnal_amp=0.8,
+                     diurnal_period=10.0)
+        n = len(generate_trace(w))
+        mean = w.qps * w.horizon
+        assert abs(n - mean) < 4 * math.sqrt(mean)
+
+    def test_lengths_and_tiers_in_range(self):
+        w = Workload(qps=4.0, horizon=30.0, seed=5, len_min=2, len_max=9,
+                     tier_probs=(0.5, 0.3, 0.2))
+        trace = generate_trace(w)
+        assert all(2 <= r.length <= 9 for r in trace)
+        assert {r.tier for r in trace} <= {0, 1, 2}
+        assert len({r.tier for r in trace}) > 1     # actually mixes tiers
+
+    def test_validation_errors(self):
+        with pytest.raises(ValueError, match="diurnal_amp"):
+            generate_trace(Workload(qps=1.0, horizon=1.0, diurnal_amp=1.0))
+        with pytest.raises(ValueError, match="positive"):
+            generate_trace(Workload(qps=0.0, horizon=1.0))
+        with pytest.raises(ValueError, match="positive"):
+            generate_trace(Workload(qps=1.0, horizon=-1.0))
+        with pytest.raises(ValueError, match="tier_probs"):
+            generate_trace(Workload(qps=1.0, horizon=1.0,
+                                    tier_probs=(-0.5, 1.5)))
+
+    def test_payload_determinism_and_modes(self):
+        req = Request(rid=7, arrival=0.0, length=12, tier=0, max_new=4,
+                      patience=1.0, deadline=1.0)
+        a = make_payload(req, mode="lm", vocab=64, seed=9)
+        b = make_payload(req, mode="lm", vocab=64, seed=9)
+        np.testing.assert_array_equal(a, b)
+        assert a.shape == (12,) and a.dtype == np.int32
+        f = make_payload(req, mode="asr", input_dim=8, seed=9)
+        assert f.shape == (12, 8) and f.dtype == np.float32
+        with pytest.raises(ValueError):
+            make_payload(req, mode="lm", vocab=0)
+        with pytest.raises(ValueError):
+            make_payload(req, mode="nope", vocab=4)
+
+
+class TestRateAt:
+    def test_no_modulation(self):
+        w = Workload(qps=3.0, horizon=1.0)
+        assert rate_at(w, 12.3) == 3.0
+
+    def test_peak_and_trough_exact(self):
+        w = Workload(qps=4.0, horizon=1.0, diurnal_amp=0.5,
+                     diurnal_period=8.0)
+        assert rate_at(w, 2.0) == pytest.approx(6.0)    # sin peak
+        assert rate_at(w, 6.0) == pytest.approx(2.0)    # sin trough
+
+    def test_monotone_in_amplitude(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @given(qps=st.floats(0.1, 50.0),
+               amp1=st.floats(0.0, 0.98), amp2=st.floats(0.0, 0.98),
+               frac=st.floats(0.01, 0.99))
+        @settings(max_examples=50, deadline=None)
+        def check(qps, amp1, amp2, frac):
+            lo, hi = sorted((amp1, amp2))
+            period = 10.0
+            t = frac * period
+            w_lo = Workload(qps=qps, horizon=1.0, diurnal_amp=lo,
+                            diurnal_period=period)
+            w_hi = Workload(qps=qps, horizon=1.0, diurnal_amp=hi,
+                            diurnal_period=period)
+            s = math.sin(2.0 * math.pi * t / period)
+            if s > 0:        # rising phase: more amplitude, more rate
+                assert rate_at(w_hi, t) >= rate_at(w_lo, t)
+            elif s < 0:      # falling phase: more amplitude, less rate
+                assert rate_at(w_hi, t) <= rate_at(w_lo, t)
+            assert rate_at(w_hi, t) >= 0.0
+
+        check()
+
+
+# ---------------------------------------------------------------------------
+# SLO accounting: nearest-rank percentiles, hand-built traces
+# ---------------------------------------------------------------------------
+
+class TestPercentile:
+    def test_nearest_rank_known_values(self):
+        vals = list(range(1, 101))                   # 1..100
+        assert percentile(vals, 50) == 50
+        assert percentile(vals, 95) == 95
+        assert percentile(vals, 99) == 99
+        assert percentile(vals, 100) == 100
+        assert percentile([7.0], 99) == 7.0
+        assert percentile([3.0, 1.0, 2.0, 4.0], 50) == 2.0  # ceil(2)-1
+        assert math.isnan(percentile([], 50))
+        assert percentile([1.0, float("nan"), 3.0], 100) == 3.0
+
+    def test_nearest_rank_is_an_element(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @given(vals=st.lists(st.floats(-1e6, 1e6), min_size=1,
+                             max_size=40),
+               q=st.floats(0.5, 100.0))
+        @settings(max_examples=50, deadline=None)
+        def check(vals, q):
+            p = percentile(vals, q)
+            assert p in vals                          # no interpolation
+            # at least ceil(q% n) samples are <= p
+            n = len(vals)
+            assert sum(v <= p for v in vals) >= math.ceil(q / 100.0 * n)
+
+        check()
+
+    def test_summarize_hand_built_trace(self):
+        r = Recorder()
+        # 4 done requests with first-token latencies 1, 2, 3, 4
+        for i, ft in enumerate([1.0, 2.0, 3.0, 4.0]):
+            r.offered(i, tier=i % 2, arrival=10.0 * i, deadline=10.0 * i + 5)
+            r.admitted(i, 10.0 * i + ft)
+            r.first_token(i, 10.0 * i + ft)
+            r.done(i, 10.0 * i + ft + 2.0, n_tokens=3)
+        # one abandoned, one rejected
+        r.offered(4, tier=0, arrival=100.0)
+        r.abandoned(4, 101.0)
+        r.offered(5, tier=1, arrival=200.0)
+        r.rejected(5, 200.0, PROMPT_TOO_LONG)
+        s = summarize(r, n_tiers=2)
+        assert s["offered"] == 6 and s["done"] == 4
+        assert s["abandoned"] == 1 and s["rejected"] == 1
+        assert s["tokens"] == 12
+        assert s["first_token"]["p50"] == 2.0        # nearest rank of n=4
+        assert s["first_token"]["p95"] == 4.0
+        assert s["final"]["p50"] == 4.0
+        # request 3: final latency 6 > deadline 5 -> 1 of 4 misses
+        assert s["deadline_miss_frac"] == pytest.approx(0.25)
+        assert s["per_tier"][0]["done"] == 2
+        assert s["per_tier"][1]["offered"] == 3
+
+    def test_first_token_stamped_once(self):
+        r = Recorder()
+        r.offered(0, 0, 0.0)
+        r.first_token(0, 1.0)
+        r.first_token(0, 9.0)                        # later stamps ignored
+        assert r.events[0].t_first == 1.0
+
+    def test_csv_rows_parse(self):
+        r = Recorder()
+        r.offered(0, 0, 0.0)
+        r.admitted(0, 0.5)
+        r.first_token(0, 0.5)
+        r.done(0, 1.0, n_tokens=2)
+        rows = summary_rows(summarize(r, n_tiers=1), "load", "virtual s")
+        assert any(n == "load/done/tier0" for n, _, _ in rows)
+        for name, value, derived in rows:
+            line = csv_row(name, value, derived)
+            parts = line.split(",", 2)
+            assert parts[0] == name
+            float(parts[1])                          # parseable value
+
+
+# ---------------------------------------------------------------------------
+# a deterministic in-memory server for controller/loop/capacity tests
+# ---------------------------------------------------------------------------
+
+class FakeServer:
+    """Slot-pool duck contract without any model: each request takes a
+    fixed number of waves; payloads longer than ``too_long`` reject."""
+
+    emits_on_admit = False
+
+    def __init__(self, slots, waves=2, too_long=10_000):
+        self.slots = slots
+        self.waves = waves
+        self.too_long = too_long
+        self.jobs = {}           # rid -> remaining waves
+
+    def submit(self, req, payload):
+        if req.length > self.too_long:
+            return AdmitResult(PROMPT_TOO_LONG)
+        if req.max_new <= 0:
+            return AdmitResult(NO_BUDGET)
+        if len(self.jobs) >= self.slots:
+            return AdmitResult(POOL_FULL)
+        self.jobs[req.rid] = self.waves
+        return AdmitResult(OK, 0)
+
+    def step_wave(self):
+        progressed = sorted(self.jobs)
+        done = []
+        for rid in progressed:
+            self.jobs[rid] -= 1
+            if self.jobs[rid] <= 0:
+                done.append((rid, [0] * self.waves))
+                del self.jobs[rid]
+        return done, progressed, len(progressed)
+
+    def preempt(self, rid):
+        return ("snap", rid, self.jobs.pop(rid))
+
+    def restore(self, snap):
+        if len(self.jobs) >= self.slots:
+            return AdmitResult(POOL_FULL)
+        self.jobs[snap[1]] = snap[2]
+        return AdmitResult(OK, 0)
+
+    def reset(self):
+        self.jobs.clear()
+
+
+def _req(rid, arrival, tier=0, length=5, max_new=4, patience=30.0,
+         deadline=60.0):
+    return Request(rid=rid, arrival=arrival, length=length, tier=tier,
+                   max_new=max_new, patience=patience, deadline=deadline)
+
+
+# ---------------------------------------------------------------------------
+# admission controller semantics
+# ---------------------------------------------------------------------------
+
+class TestAdmissionController:
+    def test_typed_terminal_rejections_recorded(self):
+        ctl = AdmissionController(FakeServer(2, too_long=10), n_tiers=1)
+        ctl.offer(_req(0, 0.0, length=99), None)      # too long
+        ctl.offer(_req(1, 0.0, max_new=0), None)      # no budget
+        ctl.offer(_req(2, 0.0), None)                 # fine
+        ctl.pump(0.0)
+        evs = ctl.recorder.events
+        assert evs[0].outcome == "rejected"
+        assert evs[0].reject_reason == PROMPT_TOO_LONG
+        assert evs[1].outcome == "rejected"
+        assert evs[1].reject_reason == NO_BUDGET
+        assert evs[2].outcome == "running"
+
+    def test_tier_order_and_fifo(self):
+        srv = FakeServer(2)
+        ctl = AdmissionController(srv, n_tiers=2)
+        for rid, tier in [(0, 1), (1, 1), (2, 0)]:
+            ctl.offer(_req(rid, 0.0, tier=tier), None)
+        ctl.pump(0.0)
+        # tier 0 admits first, then tier-1 FIFO: rids 2 and 0 run
+        assert set(srv.jobs) == {2, 0}
+
+    def test_preempts_lowest_priority_latest_admitted(self):
+        srv = FakeServer(2, waves=10)
+        ctl = AdmissionController(srv, n_tiers=3)
+        ctl.offer(_req(0, 0.0, tier=2), None)
+        ctl.offer(_req(1, 0.0, tier=1), None)
+        ctl.pump(0.0)
+        assert set(srv.jobs) == {0, 1}
+        ctl.offer(_req(2, 1.0, tier=0), None)
+        ctl.pump(1.0)
+        # rid 0 (tier 2) is the strictly-lowest-priority victim
+        assert set(srv.jobs) == {1, 2}
+        assert ctl.recorder.events[0].n_preempt == 1
+        assert ctl.recorder.n_preemptions == 1
+        # the preempted job sits at the FRONT of its tier queue
+        assert ctl.queues[2][0].rid == 0
+
+    def test_no_preemption_of_equal_priority(self):
+        srv = FakeServer(1, waves=10)
+        ctl = AdmissionController(srv, n_tiers=2)
+        ctl.offer(_req(0, 0.0, tier=0), None)
+        ctl.pump(0.0)
+        ctl.offer(_req(1, 1.0, tier=0), None)
+        ctl.pump(1.0)
+        assert set(srv.jobs) == {0}                  # rid 1 waits
+        assert ctl.recorder.n_preemptions == 0
+
+    def test_preempt_disabled(self):
+        srv = FakeServer(1, waves=10)
+        ctl = AdmissionController(srv, n_tiers=2, preempt=False)
+        ctl.offer(_req(0, 0.0, tier=1), None)
+        ctl.pump(0.0)
+        ctl.offer(_req(1, 1.0, tier=0), None)
+        ctl.pump(1.0)
+        assert set(srv.jobs) == {0}
+        assert ctl.check_inversion() == []           # not tracked when off
+
+    def test_abandonment_unstarted_only(self):
+        srv = FakeServer(1, waves=4)
+        ctl = AdmissionController(srv, n_tiers=2)
+        # rid 0 (tier 1) admitted, then preempted by rid 1 (tier 0);
+        # rid 2 never admitted.  Both 0 and 2 have tiny patience.
+        ctl.offer(_req(0, 0.0, tier=1, patience=0.1), None)
+        ctl.pump(0.0)
+        ctl.offer(_req(1, 0.0, tier=0), None)
+        ctl.offer(_req(2, 0.0, tier=1, patience=0.1), None)
+        ctl.pump(0.0)
+        assert ctl.recorder.events[0].n_preempt == 1
+        ctl.pump(5.0)                                # way past patience
+        evs = ctl.recorder.events
+        assert evs[2].outcome == "abandoned"         # never started
+        assert evs[0].outcome != "abandoned"         # preempted: kept
+        assert ctl.queues[1][0].rid == 0
+
+    def test_invalid_tier_raises(self):
+        ctl = AdmissionController(FakeServer(1), n_tiers=2)
+        with pytest.raises(ValueError, match="tier"):
+            ctl.offer(_req(0, 0.0, tier=5), None)
+        with pytest.raises(ValueError, match="n_tiers"):
+            AdmissionController(FakeServer(1), n_tiers=0)
+
+
+# ---------------------------------------------------------------------------
+# virtual-time loop: determinism, inversion-freedom, timing
+# ---------------------------------------------------------------------------
+
+class TestServingLoop:
+    def _overload_trace(self):
+        w = Workload(qps=6.0, horizon=5.0, seed=2, tier_probs=(0.3, 0.7),
+                     patience=1.0, deadline=2.0)
+        return generate_trace(w)
+
+    def _run(self, collect=None):
+        loop = ServingLoop(
+            FakeServer(2, waves=3), self._overload_trace(),
+            lambda req: None, n_tiers=2, clock=VirtualClock(),
+            cost=CostModel(admit_s=0.05, wave_base_s=0.03,
+                           per_work_s=0.01),
+            check_inversion=True, on_event=collect)
+        loop.run()
+        return loop
+
+    def test_deterministic_timeline(self):
+        ev1, ev2 = [], []
+        s1 = self._run(lambda *a: ev1.append(a)).summary()
+        s2 = self._run(lambda *a: ev2.append(a)).summary()
+        assert ev1 == ev2 and len(ev1) > 0
+        assert s1 == s2
+
+    def test_no_priority_inversion_over_run(self):
+        loop = self._run()
+        assert loop.inversions == []
+        s = loop.summary()
+        assert s["done"] > 0
+        # overload at 2 slots: tier 0 preempts tier 1 at some point
+        assert s["preemptions"] > 0
+
+    def test_all_requests_reach_terminal_state(self):
+        loop = self._run()
+        for ev in loop.controller.recorder.events.values():
+            assert ev.outcome in ("done", "abandoned", "rejected")
+
+    def test_first_token_includes_admit_cost(self):
+        trace = [_req(0, 0.0)]
+        server = FakeServer(1, waves=2)
+        server.emits_on_admit = True
+        cost = CostModel(admit_s=0.5, wave_base_s=0.125, per_work_s=0.0)
+        loop = ServingLoop(server, trace, lambda r: None, n_tiers=1,
+                           clock=VirtualClock(), cost=cost)
+        loop.run()
+        ev = loop.controller.recorder.events[0]
+        assert ev.first_token == pytest.approx(0.5)   # prefill charged
+        assert ev.final == pytest.approx(0.5 + 2 * 0.125)
+
+    def test_streaming_first_token_on_first_wave(self):
+        trace = [_req(0, 0.0)]
+        cost = CostModel(admit_s=0.5, wave_base_s=0.125, per_work_s=0.0)
+        loop = ServingLoop(FakeServer(1, waves=2), trace, lambda r: None,
+                           n_tiers=1, clock=VirtualClock(), cost=cost)
+        loop.run()
+        ev = loop.controller.recorder.events[0]
+        assert ev.first_token == pytest.approx(0.5 + 0.125)
+
+    def test_idle_gap_jumps_to_next_arrival(self):
+        trace = [_req(0, 0.0), _req(1, 100.0)]
+        loop = ServingLoop(FakeServer(1, waves=1), trace, lambda r: None,
+                           n_tiers=1, clock=VirtualClock())
+        loop.run()
+        s = loop.summary()
+        assert s["done"] == 2
+        assert loop.clock.now() >= 100.0
+        # queue-wait percentiles never saw the idle gap
+        assert s["queue_wait"]["p99"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# closed-loop capacity search
+# ---------------------------------------------------------------------------
+
+class TestCapacity:
+    def _workload(self):
+        return Workload(qps=1.0, horizon=20.0, seed=4, patience=2.0,
+                        deadline=2.0)
+
+    def test_bisection_brackets_and_reproduces(self):
+        cost = CostModel(admit_s=0.2, wave_base_s=0.1, per_work_s=0.0)
+        srv = FakeServer(2, waves=3)
+        q1, s1 = sustained_capacity(srv, self._workload(),
+                                    lambda r: None, p99_target_s=1.0,
+                                    qps_lo=0.25, qps_hi=16.0, iters=4,
+                                    cost=cost)
+        q2, s2 = sustained_capacity(srv, self._workload(),
+                                    lambda r: None, p99_target_s=1.0,
+                                    qps_lo=0.25, qps_hi=16.0, iters=4,
+                                    cost=cost)
+        assert q1 == q2 and s1 == s2                 # seeded-reproducible
+        assert 0.25 <= q1 < 16.0                     # interior of bracket
+        # the returned summary is the feasible run at max QPS
+        assert feasible(s1, p99_target_s=1.0)
+        # an interior answer means the hi bracket endpoint was infeasible
+        above = run_level(srv, self._workload().with_qps(16.0),
+                          lambda r: None, cost=cost)
+        assert not feasible(above, p99_target_s=1.0)
+
+    def test_infeasible_floor_and_feasible_ceiling(self):
+        # impossibly slow cell -> 0.0; impossibly fast -> qps_hi
+        w = self._workload()
+        slow = CostModel(admit_s=5.0, wave_base_s=5.0)
+        q, s = sustained_capacity(FakeServer(1, waves=3), w,
+                                  lambda r: None, p99_target_s=0.5,
+                                  qps_lo=0.25, qps_hi=4.0, iters=2,
+                                  cost=slow)
+        assert q == 0.0 and not feasible(s, p99_target_s=0.5)
+        fast = CostModel(admit_s=1e-4, wave_base_s=1e-4)
+        q, s = sustained_capacity(FakeServer(4, waves=1), w,
+                                  lambda r: None, p99_target_s=0.5,
+                                  qps_lo=0.25, qps_hi=4.0, iters=2,
+                                  cost=fast)
+        assert q == 4.0 and feasible(s, p99_target_s=0.5)
+
+
+# ---------------------------------------------------------------------------
+# the real servers: typed admits, batched parity, preempt bit-exactness
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_prompts():
+    rng = np.random.default_rng(0)
+    vocab = _lm_cfg().vocab
+    return [rng.integers(0, vocab, size=int(n)) for n in (5, 9, 3, 7, 6)]
+
+
+class TestLmServer:
+    def test_typed_admit_branches(self):
+        from repro.launch.serve import Server
+
+        s = Server(_lm_cfg(), slots=1, max_len=8)
+        r = s.admit(0, np.arange(10), 4)
+        assert not r and r.reason == PROMPT_TOO_LONG
+        r = s.admit(0, np.arange(3), 0)
+        assert not r and r.reason == NO_BUDGET
+        r = s.admit(0, np.arange(3), 4)
+        assert r and r.reason == OK and r.slot == 0
+        r = s.admit(1, np.arange(3), 4)
+        assert not r and r.reason == POOL_FULL
+        # typed events landed in the structured stream
+        kinds = [k for k, _, _ in s.events]
+        assert kinds.count("reject") == 2 and "admit" in kinds
+
+    def test_batched_step_matches_sequential_bit_for_bit(self, lm_prompts):
+        from repro.launch.serve import Server
+
+        def serve_all(batched):
+            s = Server(_lm_cfg(), slots=3, max_len=32, batched=batched)
+            pending = list(enumerate(lm_prompts))
+            fin = []
+            while pending or s.active.any():
+                while pending:
+                    r = s.admit(pending[0][0], pending[0][1], 6)
+                    if r.reason == POOL_FULL:
+                        break
+                    pending.pop(0)
+                fin += s.step()
+            return dict(fin)
+
+        a, b = serve_all(True), serve_all(False)
+        assert a == b                                # token-exact
+
+    def test_preempt_resume_bit_exact(self, lm_prompts):
+        from repro.launch.serve import Server
+
+        def run(preempt_at):
+            s = Server(_lm_cfg(), slots=2, max_len=32)
+            s.admit(0, lm_prompts[0], 8)
+            s.admit(1, lm_prompts[1], 8)
+            fin = []
+            for i in range(30):
+                if i == preempt_at:
+                    snap = s.preempt(0)
+                    fin += s.step()                  # rid 1 alone
+                    assert s.restore(snap)
+                fin += s.step()
+                if not s.active.any():
+                    break
+            return dict(fin)
+
+        base, pre = run(-1), run(2)
+        assert base == pre                           # both requests exact
+
+    def test_restore_pool_full_and_reset(self, lm_prompts):
+        from repro.launch.serve import Server
+
+        s = Server(_lm_cfg(), slots=1, max_len=32)
+        assert s.admit(0, lm_prompts[0], 8)
+        snap = s.preempt(0)
+        assert s.admit(1, lm_prompts[1], 8)
+        assert s.restore(snap).reason == POOL_FULL
+        s.reset()
+        assert not s.active.any() and s.events == []
+        assert s.restore(snap)                       # resumes after reset
+
+    def test_preempt_unknown_rid_raises(self, lm_prompts):
+        from repro.launch.serve import Server
+
+        s = Server(_lm_cfg(), slots=1, max_len=32)
+        s.admit(0, lm_prompts[0], 4)
+        with pytest.raises(KeyError):
+            s.preempt(99)
+
+    def test_step_wave_contract(self, lm_prompts):
+        from repro.launch.serve import Server
+
+        s = Server(_lm_cfg(), slots=2, max_len=32)
+        assert s.emits_on_admit
+        s.admit(0, lm_prompts[0], 2)
+        s.admit(1, lm_prompts[1], 2)
+        done, progressed, work = s.step_wave()
+        assert progressed == [0, 1] and work == 2
+        assert [rid for rid, _ in done] == [0, 1]    # budget exhausted
+
+
+@pytest.fixture(scope="module")
+def asr_feats():
+    cfg = _asr_cfg()
+    rng = np.random.default_rng(1)
+    return [rng.standard_normal((n, cfg.input_dim)).astype(np.float32)
+            for n in (11, 7, 14)]
+
+
+class TestAsrServer:
+    def test_typed_admit_branches(self, asr_feats):
+        from repro.launch.serve import AsrServer
+
+        cfg = _asr_cfg()
+        s = AsrServer(cfg, slots=1, max_frames=16, chunk=4, beam=3)
+        r = s.admit(0, np.zeros((20, cfg.input_dim), np.float32))
+        assert not r and r.reason == PROMPT_TOO_LONG
+        r = s.admit(0, np.zeros((0, cfg.input_dim), np.float32))
+        assert not r and r.reason == NO_BUDGET
+        assert s.admit(0, asr_feats[0])
+        assert s.admit(1, asr_feats[1]).reason == POOL_FULL
+
+    def test_preempt_resume_bit_exact(self, asr_feats):
+        from repro.launch.serve import AsrServer
+
+        def run(preempt_at):
+            s = AsrServer(_asr_cfg(), slots=2, max_frames=16, chunk=4,
+                          beam=3)
+            s.admit(0, asr_feats[0])
+            s.admit(1, asr_feats[1])
+            fin = []
+            for i in range(20):
+                if i == preempt_at:
+                    snap = s.preempt(0)
+                    d, _ = s.step()
+                    fin += d
+                    assert s.restore(snap)
+                d, _ = s.step()
+                fin += d
+                if not s.active.any():
+                    break
+            return dict(fin)
+
+        base, pre = run(-1), run(1)
+        assert base == pre                           # hypotheses exact
+
+    def test_streaming_contract(self, asr_feats):
+        from repro.launch.serve import AsrServer
+
+        s = AsrServer(_asr_cfg(), slots=2, max_frames=16, chunk=4, beam=3)
+        assert not s.emits_on_admit                  # first token on wave
+        s.admit(0, asr_feats[0])                     # 11 frames
+        s.admit(1, asr_feats[1])                     # 7 frames
+        done, progressed, work = s.step_wave()
+        assert progressed == [0, 1]
+        assert work == 8                             # 4 + 4 valid frames
+        _, _, work = s.step_wave()
+        assert work == 7                             # 4 + 3 (tail clamp)
+
+
+class TestBeamRowOps:
+    def test_gather_scatter_round_trip(self):
+        import jax.numpy as jnp
+
+        from repro.decode import gather_rows, init_state, scatter_rows
+
+        state = init_state(4, 3, 10)
+        # make rows distinguishable
+        state = state._replace(p_b=state.p_b + jnp.arange(4)[:, None],
+                               t=jnp.arange(4, dtype=jnp.int32))
+        rows = gather_rows(state, [2])
+        assert rows.p_b.shape[0] == 1 and int(rows.t[0]) == 2
+        out = scatter_rows(init_state(4, 3, 10), rows, [2])
+        np.testing.assert_array_equal(np.asarray(out.p_b[2]),
+                                      np.asarray(state.p_b[2]))
+        assert int(out.t[2]) == 2
+        # other rows untouched
+        np.testing.assert_array_equal(
+            np.asarray(out.p_b[0]),
+            np.asarray(init_state(4, 3, 10).p_b[0]))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: real server through the virtual loop, seeded twice
+# ---------------------------------------------------------------------------
+
+class TestEndToEnd:
+    def test_lm_loop_seeded_reproducible(self):
+        from repro.launch.serve import Server
+
+        cfg = _lm_cfg()
+        w = Workload(qps=3.0, horizon=4.0, seed=7, len_median=6.0,
+                     len_min=2, len_max=15, max_new=4, patience=2.0,
+                     deadline=2.0)
+        payload = lambda req: make_payload(req, mode="lm",
+                                           vocab=cfg.vocab, seed=w.seed)
+
+        def run():
+            events = []
+            loop = ServingLoop(
+                Server(cfg, slots=2, max_len=16), generate_trace(w),
+                payload, n_tiers=2, clock=VirtualClock(),
+                cost=CostModel(), check_inversion=True,
+                on_event=lambda *a: events.append(a))
+            loop.run()
+            return events, loop.summary(), loop.inversions
+
+        (e1, s1, inv1), (e2, s2, inv2) = run(), run()
+        assert e1 == e2 and s1 == s2                 # identical timeline
+        assert inv1 == [] and inv2 == []
+        assert s1["done"] > 0
+        assert s1["offered"] == s1["done"] + s1["abandoned"] \
+            + s1["rejected"]
