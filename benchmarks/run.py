@@ -32,6 +32,7 @@ def all_benches():
         ("decode_microbench", _decode_microbench),
         ("decode_wer", T.bench_decode_wer),
         ("serve_microbench", _serve_microbench),
+        ("paged_kv", _paged_microbench),
         ("load_capacity", _load_capacity),
     ]
 
@@ -575,6 +576,127 @@ def _serve_microbench():
     return rows
 
 
+def _paged_microbench():
+    """Paged-KV serving bench (``--only paged``): what the page pool
+    buys at a FIXED HBM budget (docs/serving.md §KV paging).
+
+    (a) HBM per request — a dense slot pins ``max_len`` cache positions
+    regardless of the request; a paged request pins
+    ``ceil((plen + max_new) / P)`` pages.  (b) Max concurrent requests
+    at equal HBM, measured by admitting short requests into real
+    servers until the typed ``pool_full`` — the acceptance bar is >= 4x
+    the dense slot count.  (c) A further capacity uplift when prompts
+    share a prefix (trie sharing makes the shared pages free).
+    (d) Decode tok/s at EQUAL batch, dense vs paged (jax path; wall
+    time of real reduced-model decode waves): paged attends only its
+    allocated pages, so short requests are not slower despite the
+    table indirection.  (e) The paged VMEM accounting row."""
+    import time as _time
+
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.kernels.decode_attention import paged_attn_vmem_bytes
+    from repro.launch.serve import PagedServer, Server
+    from repro.serving.admission import POOL_FULL
+    from repro.serving.kvpool import cdiv
+
+    cfg = get_arch("smollm-360m").reduced()
+    MAX_LEN, P, SLOTS_EQ = 64, 8, 2
+    POOL_PAGES = SLOTS_EQ * MAX_LEN // P      # dense-equivalent HBM
+    L, KV, E = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    PLEN, MAX_NEW = 3, 4                      # short-prompt workload
+    kv_bytes = 2 * 2 * L * KV * E             # k+v, bf16, per position
+    rows = []
+
+    # (a) HBM per request
+    dense_kb = MAX_LEN * kv_bytes / 1024
+    paged_kb = cdiv(PLEN + MAX_NEW, P) * P * kv_bytes / 1024
+    rows.append(("paged/hbm_kb_per_request_dense", dense_kb,
+                 f"max_len={MAX_LEN} row, bf16 k+v, reduced arch"))
+    rows.append(("paged/hbm_kb_per_request_paged", paged_kb,
+                 f"ceil(({PLEN}+{MAX_NEW})/{P}) pages of {P}"))
+    rows.append(("paged/hbm_shrink", dense_kb / paged_kb,
+                 "x less HBM pinned per short request"))
+
+    # (b) max concurrent requests at the fixed pool budget
+    rng = np.random.default_rng(0)
+
+    def fill(server, prompts):
+        n = 0
+        for i, prompt in enumerate(prompts):
+            if server.admit(i, prompt, MAX_NEW).reason == POOL_FULL:
+                break
+            n += 1
+        return n
+
+    distinct = [rng.integers(0, cfg.vocab, size=PLEN)
+                for _ in range(POOL_PAGES + SLOTS_EQ + 2)]
+    dense_n = fill(Server(cfg, slots=SLOTS_EQ, max_len=MAX_LEN), distinct)
+    paged_n = fill(PagedServer(cfg, pool_pages=POOL_PAGES, page_size=P,
+                               max_len=MAX_LEN), distinct)
+    rows.append(("paged/max_concurrent_dense", dense_n,
+                 f"{SLOTS_EQ} slots x {MAX_LEN} positions"))
+    rows.append(("paged/max_concurrent_paged", paged_n,
+                 f"{POOL_PAGES} pages x {P} positions (equal HBM)"))
+    rows.append(("paged/concurrency_gain", paged_n / max(dense_n, 1),
+                 "x more in-flight short requests at equal HBM "
+                 "(acceptance: >= 4x)"))
+
+    # (c) shared-prefix capacity uplift (identical prompts, one page-
+    # aligned prefix: the trie makes every prompt page after the first
+    # request free)
+    shared_prompt = rng.integers(0, cfg.vocab, size=2 * P)
+    shared = [shared_prompt] * (POOL_PAGES + 2)
+    shared_n = fill(PagedServer(cfg, pool_pages=POOL_PAGES, page_size=P,
+                                max_len=MAX_LEN), shared)
+    unshared_n = fill(PagedServer(cfg, pool_pages=POOL_PAGES, page_size=P,
+                                  max_len=MAX_LEN, share=False), shared)
+    rows.append(("paged/shared_prefix_capacity_uplift",
+                 shared_n / max(unshared_n, 1),
+                 f"{shared_n} vs {unshared_n} concurrent at plen={2*P} "
+                 f"identical prompts (trie sharing on/off)"))
+
+    # (d) decode tok/s at equal batch (jax path, wall time; dense slots
+    # == paged in-flight so the batched wave shapes match)
+    B, NT = 4, 12
+    prompts = [rng.integers(0, cfg.vocab, size=8) for _ in range(B)]
+
+    def tok_per_s(mk):
+        best = 0.0
+        for _ in range(3):                    # later runs: everything jitted
+            server = mk()
+            for i, prompt in enumerate(prompts):
+                assert server.admit(i, prompt, NT + 1)
+            t0 = _time.time()
+            done = []
+            while server.active.any():
+                done += server.step()
+            dt = _time.time() - t0
+            toks = sum(len(o) for _, o in done) - B  # first token: prefill
+            best = max(best, toks / max(dt, 1e-9))
+            server.reset()
+        return best
+
+    dense_tps = tok_per_s(lambda: Server(cfg, slots=B, max_len=MAX_LEN))
+    paged_tps = tok_per_s(lambda: PagedServer(
+        cfg, pool_pages=POOL_PAGES, page_size=P, max_len=MAX_LEN))
+    rows.append(("paged/tok_per_s_dense", dense_tps,
+                 f"B={B} decode waves, jax path, wall"))
+    rows.append(("paged/tok_per_s_paged", paged_tps,
+                 f"B={B}, pages streamed per table (wall)"))
+    rows.append(("paged/tok_per_s_ratio", paged_tps / max(dense_tps, 1e-9),
+                 "paged/dense at equal batch (acceptance: >= 0.9)"))
+
+    # (e) VMEM accounting at page granularity
+    M = cfg.n_heads // KV
+    rows.append(("paged/paged_attn_vmem_kb",
+                 paged_attn_vmem_bytes(P, M, E, B * MAX_LEN // P) / 1024,
+                 f"page tile {P} + prefetched (B={B}, W={MAX_LEN//P}) "
+                 f"table SMEM"))
+    return rows
+
+
 def _load_capacity():
     """The closed-loop capacity report (``--only load``): for each
     (mode × kernel-impl × beam-topc) serving cell, bisect the max
@@ -593,7 +715,7 @@ def _load_capacity():
     import dataclasses
 
     from repro.configs import get_arch
-    from repro.launch.serve import AsrServer, Server
+    from repro.launch.serve import AsrServer, PagedServer, Server
     from repro.serving import (CostModel, Workload, make_payload,
                                sustained_capacity)
 
@@ -621,6 +743,13 @@ def _load_capacity():
          CostModel(admit_s=0.080, wave_base_s=0.040, per_work_s=1e-3), 3),
         ("lm/pallas", "lm", lambda: lm_server("pallas"),
          CostModel(admit_s=0.056, wave_base_s=0.024, per_work_s=5e-4), 2),
+        # paged page-pool server at the dense-equivalent HBM (SLOTS *
+        # MAX_LEN positions = 6 pages of 8); same nominal costs as
+        # lm/jax so the capacity delta is purely admission behaviour
+        ("lm/paged", "lm",
+         lambda: PagedServer(lm_cfg, pool_pages=6, page_size=8,
+                             max_len=MAX_LEN),
+         CostModel(admit_s=0.080, wave_base_s=0.040, per_work_s=1e-3), 2),
         ("asr/jax/topc0", "asr", lambda: asr_server("jax", 0),
          CostModel(admit_s=0.060, wave_base_s=0.040, per_work_s=1e-3), 3),
         ("asr/jax/topc8", "asr", lambda: asr_server("jax", 8),
@@ -657,24 +786,44 @@ def _load_capacity():
 
 
 def main(argv=None) -> None:
+    import json
+
     from repro.serving.slo import print_csv_rows
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated substrings; a bench runs if "
+                         "ANY matches its name")
+    ap.add_argument("--json-out", default="",
+                    help="also write every row as machine-readable JSON "
+                         "([{name, value, derived}, ...]) to this path "
+                         "(the CI artifact format)")
     args = ap.parse_args(argv)
+    wanted = [w for w in args.only.split(",") if w]
 
     # the shared name,value,derived schema (repro.serving.slo)
     print_csv_rows([], header=True)
     failures = 0
+    collected = []
     for name, fn in all_benches():
-        if args.only and args.only not in name:
+        if wanted and not any(w in name for w in wanted):
             continue
         try:
-            print_csv_rows(fn())
+            rows = fn()
+            print_csv_rows(rows)
+            collected += [{"name": n, "value": v, "derived": d}
+                          for n, v, d in rows]
         except Exception as e:
             failures += 1
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+            collected.append({"name": name, "value": None,
+                              "derived": f"ERROR {type(e).__name__}: {e}"})
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(collected, f, indent=1)
+        print(f"[bench] wrote {len(collected)} rows to {args.json_out}",
+              flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmark failures")
 

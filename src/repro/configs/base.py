@@ -154,6 +154,14 @@ class ArchConfig:
     # decode-step attention: '' (follow the launcher's --kernel-impl) |
     # 'jax' | 'pallas' (repro.kernels.decode_attention streaming kernel)
     attn_decode_impl: str = ""
+    # ---- serving KV-cache layout (serve.py --cache; docs/serving.md
+    # §KV paging) ----
+    # 'dense' (per-slot max_len rows) | 'paged' (shared page pool with
+    # prompt-prefix sharing + COW; attention-only decoder families)
+    cache_mode: str = "dense"
+    # cache positions per physical KV page under cache_mode='paged'
+    # (serve.py --page-size overrides; must divide the serve max_len)
+    page_size: int = 16
 
     # which shapes this arch supports (see DESIGN.md skip notes)
     skip_shapes: tuple = ()

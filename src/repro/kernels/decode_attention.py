@@ -68,22 +68,44 @@ def decode_attn_vmem_bytes(block_s: int, M: int, E: int,
     return qo + kv + carry
 
 
+def paged_attn_vmem_bytes(page_size: int, M: int, E: int, table_elems: int,
+                          itemsize: int = 4) -> int:
+    """Paged-mode resident bytes per grid program: the dense accounting
+    at ``block_s = page_size`` plus the scalar-prefetched page table and
+    (pos, window) meta in SMEM (``table_elems = B * table_width`` i32)."""
+    return (decode_attn_vmem_bytes(page_size, M, E, itemsize)
+            + 4 * (table_elems + 2))
+
+
 def auto_block_s_decode(S: int, M: int, E: int, itemsize: int = 4,
-                        vmem_budget=None) -> int:
-    """Largest power-of-two S-tile (<= S, >= 8) within the VMEM budget."""
+                        vmem_budget=None, page_size: int = None) -> int:
+    """Largest power-of-two S-tile (<= S, >= 8) within the VMEM budget.
+
+    With ``page_size`` set (paged cache) the tile is PINNED to one page —
+    the physical pages are not contiguous so a tile cannot span them —
+    and this only validates that a page-sized tile fits the budget."""
     budget = vmem_budget or DEFAULT_VMEM_BUDGET
+    if page_size is not None:
+        if decode_attn_vmem_bytes(page_size, M, E, itemsize) > budget:
+            raise ValueError(
+                f"page_size={page_size} tile exceeds the VMEM budget "
+                f"({decode_attn_vmem_bytes(page_size, M, E, itemsize)} "
+                f"> {budget}); shrink the page")
+        return int(page_size)
     bs = min(512, 1 << max(int(S) - 1, 0).bit_length())
     while bs > 8 and decode_attn_vmem_bytes(bs, M, E, itemsize) > budget:
         bs //= 2
     return max(8, min(bs, S))
 
 
-def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
-                   acc_ref, m_ref, l_ref, *, block_s, seq_len, n_tiles,
-                   scale, delta, kn_ref=None, vn_ref=None):
+def _attend_tile(pos, win, q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, *, block_s, seq_len, n_tiles,
+                 scale, delta, kn_ref=None, vn_ref=None):
+    """One grid step of the online-softmax walk — shared verbatim by the
+    dense and paged kernels (``pos``/``win`` arrive as traced scalars;
+    only the BlockSpec index maps differ), so contiguous-page paged
+    output is bit-exact vs dense at ``block_s == page_size``."""
     s_idx = pl.program_id(2)
-    pos = pos_ref[0, 0]
-    win = win_ref[0, 0]
     q = q_ref[...].astype(jnp.float32)                       # (M, E)
     M, E = q.shape
 
@@ -133,6 +155,15 @@ def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
     def _flush():
         o_ref[...] = (acc_ref[...]
                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _decode_kernel(pos_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, block_s, seq_len, n_tiles,
+                   scale, delta, kn_ref=None, vn_ref=None):
+    _attend_tile(pos_ref[0, 0], win_ref[0, 0], q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, block_s=block_s, seq_len=seq_len,
+                 n_tiles=n_tiles, scale=scale, delta=delta,
+                 kn_ref=kn_ref, vn_ref=vn_ref)
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=None, k_new=None,
@@ -195,3 +226,87 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, k_new=None,
         interpret=interpret,
     )(*args)
     return out.reshape(B, 1, H, E)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, pos, *,
+                           window=None, k_new=None, v_new=None,
+                           vmem_budget=None, interpret=None):
+    """Paged decode attention: q (B, 1, H, E) vs a page pool
+    (n_pages, P, KV, E) walked through ``page_table`` (B, W) i32.
+
+    The grid's inner axis is the LOGICAL page index s; the page table is
+    scalar-prefetched (SMEM) so the k/v BlockSpec index maps resolve
+    ``table[b, s]`` to a physical page before the DMA issues — the tile
+    is pinned to one page (``block_s = P``), everything else (online-
+    softmax carry, GQA grouping, windowing, the fused ``k_new``/``v_new``
+    delta init, masking at ``t <= pos`` with t = s·P + i) is the dense
+    kernel's ``_attend_tile`` unchanged.  Table rows may be padded with
+    any valid physical page id beyond the request's allocated pages —
+    those tiles start above ``pos`` and are skipped.
+    """
+    B, _, H, E = q.shape
+    n_pages, P, KV = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    W = page_table.shape[-1]
+    M = H // KV
+    S = W * P                               # logical sequence length
+    delta = k_new is not None
+    interpret = _resolve_interpret(interpret)
+    auto_block_s_decode(S, M, E, k_pages.dtype.itemsize, vmem_budget,
+                        page_size=P)        # budget check only
+    meta = jnp.stack([jnp.asarray(pos, jnp.int32).reshape(()),
+                      jnp.asarray(_NO_WINDOW if window is None else window,
+                                  jnp.int32).reshape(())])
+    tbl = jnp.asarray(page_table, jnp.int32).reshape(B, W)
+    qg = q.reshape(B, KV, M, E)
+    page_spec = pl.BlockSpec((None, P, None, E),
+                             lambda b, g, s, meta_ref, tbl_ref:
+                             (tbl_ref[b, s], 0, g, 0))
+    q_spec = pl.BlockSpec((None, None, M, E),
+                          lambda b, g, s, meta_ref, tbl_ref: (b, g, 0, 0))
+    in_specs = [q_spec, page_spec, page_spec]
+    args = [qg, k_pages, v_pages]
+    kern = functools.partial(
+        _paged_kernel, seq_len=S, n_tiles=W,
+        scale=float(1.0 / np.sqrt(E)), delta=delta)
+    if delta:
+        new_spec = pl.BlockSpec((None, 1, None, E),
+                                lambda b, g, s, meta_ref, tbl_ref:
+                                (b, 0, g, 0))
+        in_specs += [new_spec, new_spec]
+        args += [k_new, v_new]
+
+        def body(meta_ref, tbl_ref, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                 o_ref, acc_ref, m_ref, l_ref):
+            kern(meta_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, kn_ref=kn_ref, vn_ref=vn_ref)
+    else:
+        body = kern
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, W),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((None, None, M, E),
+                               lambda b, g, s, meta_ref, tbl_ref:
+                               (b, g, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((M, E), jnp.float32),
+                        pltpu.VMEM((M, 1), jnp.float32),
+                        pltpu.VMEM((M, 1), jnp.float32)])
+    out = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, M, E), q.dtype),
+        interpret=interpret,
+    )(meta, tbl, *args)
+    return out.reshape(B, 1, H, E)
+
+
+def _paged_kernel(meta_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, seq_len, n_tiles, scale,
+                  delta, kn_ref=None, vn_ref=None):
+    # tbl_ref is consumed by the BlockSpec index maps; the tile math
+    # sees logical positions only.
+    block_s = k_ref.shape[0]                # one page per tile
+    _attend_tile(meta_ref[0], meta_ref[1], q_ref, k_ref, v_ref, o_ref,
+                 acc_ref, m_ref, l_ref, block_s=block_s, seq_len=seq_len,
+                 n_tiles=n_tiles, scale=scale, delta=delta,
+                 kn_ref=kn_ref, vn_ref=vn_ref)

@@ -24,12 +24,13 @@ import sys
 from repro.configs import get_arch
 from repro.serving import (CostModel, ServingLoop, VirtualClock, WallClock,
                            Workload, generate_trace, make_payload,
-                           print_csv_rows, summary_rows)
+                           print_csv_rows, prompt_capacity, summary_rows)
 
 
 def build_server(cfg, args):
     """The slot-pool server for this arch family plus its payload mode."""
-    from repro.launch.serve import AsrServer, Server
+    from repro.launch.serve import AsrServer, PagedServer, Server
+    from repro.serving.kvpool import cdiv
 
     if cfg.family == "lstm":
         server = AsrServer(
@@ -38,6 +39,14 @@ def build_server(cfg, args):
             kernel_impl=args.kernel_impl,
             topc=None if args.beam_topc < 0 else args.beam_topc)
         return server, "asr"
+    if (args.cache or cfg.cache_mode) == "paged":
+        page = args.page_size or cfg.page_size
+        pool_pages = args.pool_pages or args.slots * cdiv(args.max_len,
+                                                          page)
+        server = PagedServer(cfg, pool_pages=pool_pages, page_size=page,
+                             max_len=args.max_len,
+                             kernel_impl=args.kernel_impl)
+        return server, "lm"
     server = Server(cfg, slots=args.slots, max_len=args.max_len,
                     kernel_impl=args.kernel_impl)
     return server, "lm"
@@ -46,8 +55,8 @@ def build_server(cfg, args):
 def build_workload(args, mode: str) -> Workload:
     tier_probs = tuple(float(p) for p in args.tier_probs.split(","))
     # payload lengths capped so every offered request is admissible
-    # (LM reserves one cache position for the first generated token)
-    len_max = args.max_len - 1 if mode == "lm" else args.max_len
+    # (prompt_capacity: the LM/ASR off-by-one contract in one place)
+    len_max = prompt_capacity(args.max_len, mode)
     return Workload(
         qps=args.qps, horizon=args.horizon, seed=args.seed,
         tier_probs=tier_probs, len_median=args.len_median,
@@ -85,6 +94,17 @@ def main(argv=None):
                          "(0 off, -1 cfg)")
     ap.add_argument("--kernel-impl", default="jax",
                     choices=["jax", "pallas"])
+    ap.add_argument("--cache", default="",
+                    choices=["", "dense", "paged"],
+                    help="LM KV-cache layout: dense slot rows or the "
+                         "paged page-pool server (default: "
+                         "cfg.cache_mode)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="positions per KV page under --cache paged "
+                         "(0 = cfg.page_size)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="physical pages in the paged pool (0 = slots * "
+                         "max_len / page_size, the dense-equivalent HBM)")
     ap.add_argument("--tier-probs", default="0.25,0.75",
                     help="comma list of priority-tier draw probabilities "
                          "(tier 0 = highest; preempts lower tiers)")

@@ -53,7 +53,9 @@ from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_local_mesh, rules_for
 from repro.models import build_model
 from repro.serving.admission import (NO_BUDGET, OK, POOL_FULL,
-                                     PROMPT_TOO_LONG, AdmitResult)
+                                     PROMPT_TOO_LONG, AdmitResult,
+                                     prompt_capacity)
+from repro.serving.kvpool import PagePool, cdiv
 from repro.sharding import ParamSpec, init_spec_tree
 
 
@@ -166,7 +168,7 @@ class Server(_SlotPool):
         ``no_budget`` (max_new <= 0) — each is a distinct cause, not a
         silent False."""
         prompt = np.asarray(prompt)
-        if len(prompt) > self.max_len - 1:
+        if len(prompt) > prompt_capacity(self.max_len, "lm"):
             self._event("reject", req_id, reason=PROMPT_TOO_LONG,
                         prompt=len(prompt))
             return AdmitResult(PROMPT_TOO_LONG)
@@ -300,6 +302,277 @@ class Server(_SlotPool):
                         tokens=len(self.outputs[slot]))
 
 
+class PagedServer:
+    """LM continuous batching over a PAGED KV cache (``--cache paged``).
+
+    Same duck contract and decode loop as :class:`Server`, but the
+    physical cache is one shared pool of ``pool_pages`` pages of
+    ``page_size`` positions (models/transformer.py ``page_specs``) and
+    capacity is the *page budget*, not a slot count: a short request
+    pins ``ceil((plen + max_new) / P)`` pages instead of a full
+    ``max_len`` row, so many more short requests fit the same HBM.
+    Host-side bookkeeping (refcounts, the prompt-prefix trie, COW) lives
+    in :class:`repro.serving.kvpool.PagePool`; this class owns the
+    device page arrays and applies the pool's decisions:
+
+    * **admit** — pages are reserved eagerly (all-or-nothing; admitted
+      requests never OOM mid-decode).  Worst-case demand beyond the
+      whole pool is the *terminal* ``no_budget``; insufficient free
+      pages right now is the retryable ``pool_full``.  Prefill runs at
+      page-rounded length and its cache rows scatter into the owned
+      pages only — trie-shared prefix pages already hold the bytes.
+    * **step** — equal-position groups decode as one batched call, the
+      per-request page tables stacked into the (Bg, W) table the paged
+      attention walks.  Before the wave's cache write,
+      ``pool.ensure_writable`` COWs any shared page (device page copy
+      here, refcount moves in the pool).
+    * **preempt/restore** — the snapshot is the page *table* plus the
+      owned pages' contents; restore re-allocates through the trie, so
+      a resumed request may re-share prompt pages and is still
+      bit-exact: shared pages are only read below the request's
+      position, where content is verified-identical prompt.
+    """
+
+    emits_on_admit = True
+
+    def __init__(self, cfg, *, pool_pages: int, page_size: int,
+                 max_len: int, seed: int = 0, kernel_impl: str = "jax",
+                 share: bool = True, verbose: bool = False):
+        assert cfg.supports_decode and cfg.family in ("dense", "moe", "vlm"), \
+            "paged KV cache covers attention-only decoder families"
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"page_size {page_size}")
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.max_len = max_len
+        self.page_size = page_size
+        self.table_w = cdiv(max_len, page_size)
+        self.pool = PagePool(pool_pages, page_size, seed=seed, share=share)
+        self.events = []
+        self.verbose = verbose
+        self.peak_sharing = 0.0
+        self.params = init_spec_tree(self.model.param_specs(),
+                                     jax.random.PRNGKey(seed))
+        pages = zeros_from_specs(
+            self.model.page_specs(pool_pages, page_size))
+        self.k_pages = pages["attn"]["k"]
+        self.v_pages = pages["attn"]["v"]
+        self.reqs = {}    # rid -> {pos, token, budget, outputs, ...}
+
+        self._jit_prefill = jax.jit(
+            lambda params, batch, cl: self.model.prefill_fn(
+                params, batch, cache_len=cl, kernel_impl=kernel_impl),
+            static_argnums=2)
+        self._jit_decode = jax.jit(
+            lambda params, kp, vp, tbl, tok, pos: self.model.decode_fn(
+                params, {"attn": {"k": kp, "v": vp}}, tok, pos,
+                kernel_impl=kernel_impl, page_table=tbl,
+                page_size=page_size))
+        self._jit_write = jax.jit(
+            lambda pool, rows, idx: pool.at[:, idx].set(
+                rows.astype(pool.dtype)))
+        self._jit_copy_page = jax.jit(
+            lambda pool, src, dst: pool.at[:, dst].set(pool[:, src]))
+        if kernel_impl == "pallas":
+            self._select = lambda row: int(DC.argmax_tokens(row[None])[0])
+        else:
+            self._select = lambda row: int(jnp.argmax(row))
+
+    # ------------------------------------------------------------------
+    def _event(self, kind: str, rid: int, **kw):
+        self.events.append((kind, rid, kw))
+        if self.verbose:
+            extra = "".join(f" {k}={v}" for k, v in kw.items())
+            print(f"[req] {kind} rid={rid}{extra}", flush=True)
+
+    @property
+    def active(self):
+        """In-flight mask (duck compat with the slot servers' loops —
+        one entry per live request, not per slot)."""
+        return np.ones(len(self.reqs), bool)
+
+    def active_requests(self):
+        return list(self.reqs)
+
+    def occupancy(self) -> float:
+        return self.pool.pages_in_use / self.pool.n_pages
+
+    # ------------------------------------------------------------------
+    def admit(self, req_id: int, prompt: np.ndarray,
+              max_new: int) -> AdmitResult:
+        """Page-budget admission.  Typed rejection: ``prompt_too_long``
+        (prompt exceeds the LM capacity contract), ``no_budget``
+        (max_new <= 0, OR worst-case page demand exceeds the whole pool
+        — the request can never fit, terminal), ``pool_full`` (not
+        enough free pages right now, retryable)."""
+        prompt = np.asarray(prompt)
+        plen = len(prompt)
+        if plen > prompt_capacity(self.max_len, "lm"):
+            self._event("reject", req_id, reason=PROMPT_TOO_LONG,
+                        prompt=plen)
+            return AdmitResult(PROMPT_TOO_LONG)
+        total = min(plen + max_new, self.max_len)
+        if max_new <= 0 or self.pool.pages_for(total) > self.pool.n_pages:
+            self._event("reject", req_id, reason=NO_BUDGET,
+                        pages=self.pool.pages_for(max(total, 0)),
+                        pool=self.pool.n_pages)
+            return AdmitResult(NO_BUDGET)
+        alloc = self.pool.alloc_request(req_id, prompt, total)
+        if alloc is None:
+            return AdmitResult(POOL_FULL)
+        P = self.page_size
+        pp = cdiv(plen, P) * P          # page-rounded prefill length
+        logits, row_cache = self._jit_prefill(
+            self.params, {"tokens": jnp.asarray(prompt[None, :])}, pp)
+        self._write_owned(row_cache, alloc.table, alloc.owned,
+                          n_pages=cdiv(plen, P))
+        nxt = self._select(logits[0, -1])
+        self.reqs[req_id] = {
+            "pos": plen, "token": nxt, "budget": max_new - 1,
+            "outputs": [nxt], "prompt": tuple(int(t) for t in prompt),
+            "total": total,
+        }
+        self.peak_sharing = max(self.peak_sharing, self.pool.sharing_ratio)
+        self._event("admit", req_id, prompt=plen,
+                    pages=alloc.n_pages, shared=alloc.n_shared,
+                    in_use=self.pool.pages_in_use)
+        return AdmitResult(OK, 0)
+
+    def _write_owned(self, row_cache, table, owned, n_pages):
+        """Scatter an (L, 1, n_pages*P, KV, E) prefill row into the OWNED
+        physical pages of the first ``n_pages`` table entries (shared
+        pages already hold identical prompt bytes)."""
+        own = [j for j in range(n_pages) if owned[j]]
+        if not own:
+            return
+        phys = jnp.asarray([table[j] for j in own], jnp.int32)
+        P = self.page_size
+
+        def rows(arr):   # (L, 1, pp, KV, E) -> (L, n_own, P, KV, E)
+            L, _, pp, KV, E = arr.shape
+            return arr[:, 0].reshape(L, pp // P, P, KV, E)[:, own]
+
+        self.k_pages = self._jit_write(self.k_pages,
+                                       rows(row_cache["attn"]["k"]), phys)
+        self.v_pages = self._jit_write(self.v_pages,
+                                       rows(row_cache["attn"]["v"]), phys)
+
+    # ----------------------------------------------------- duck contract
+    def submit(self, req, payload) -> AdmitResult:
+        return self.admit(req.rid, payload, req.max_new)
+
+    def step_wave(self):
+        progressed = self.active_requests()
+        done = self.step()
+        return done, progressed, len(progressed)
+
+    def preempt(self, rid: int):
+        """Evict ``rid``: snapshot its page table's OWNED pages (host)
+        plus the bookkeeping, release the pages to the pool."""
+        r = self.reqs.pop(rid)
+        table = self.pool.table_of(rid)
+        snap = {
+            "rid": rid, "pos": r["pos"], "token": r["token"],
+            "budget": r["budget"], "outputs": list(r["outputs"]),
+            "prompt": r["prompt"], "total": r["total"],
+            "pages_k": np.asarray(self.k_pages[:, jnp.asarray(table)]),
+            "pages_v": np.asarray(self.v_pages[:, jnp.asarray(table)]),
+        }
+        self.pool.free_request(rid)
+        self._event("preempt", rid, pos=r["pos"], pages=len(table))
+        return snap
+
+    def restore(self, snap) -> AdmitResult:
+        """Resume a preempted request: re-allocate through the trie
+        (prompt pages may re-share; pages holding decode output never
+        do) and scatter the snapshot into the owned pages."""
+        rid = snap["rid"]
+        alloc = self.pool.alloc_request(rid, snap["prompt"], snap["total"],
+                                        written_upto=snap["pos"])
+        if alloc is None:
+            return AdmitResult(POOL_FULL)
+        own = [j for j in range(alloc.n_pages) if alloc.owned[j]]
+        if own:
+            phys = jnp.asarray([alloc.table[j] for j in own], jnp.int32)
+            self.k_pages = self._jit_write(
+                self.k_pages, jnp.asarray(snap["pages_k"][:, own]), phys)
+            self.v_pages = self._jit_write(
+                self.v_pages, jnp.asarray(snap["pages_v"][:, own]), phys)
+        self.reqs[rid] = {k: snap[k] for k in
+                          ("pos", "token", "budget", "prompt", "total")}
+        self.reqs[rid]["outputs"] = list(snap["outputs"])
+        self.peak_sharing = max(self.peak_sharing, self.pool.sharing_ratio)
+        self._event("restore", rid, pos=snap["pos"],
+                    shared=alloc.n_shared)
+        return AdmitResult(OK, 0)
+
+    def reset(self):
+        self.pool.reset()
+        self.k_pages = jnp.zeros_like(self.k_pages)
+        self.v_pages = jnp.zeros_like(self.v_pages)
+        self.reqs.clear()
+        self.events.clear()
+        self.peak_sharing = 0.0
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """Advance every in-flight request one token: equal-position
+        groups share one batched decode (same grouping rule as the dense
+        server, so outputs are bit-identical to it given equal logits);
+        shared pages COW before the wave's cache write."""
+        done = []
+        for p in sorted({r["pos"] for r in self.reqs.values()}):
+            group = [rid for rid, r in self.reqs.items()
+                     if r["pos"] == p]
+            for rid in group:    # COW before the device write at p
+                moved = self.pool.ensure_writable(rid, p)
+                if moved is not None:
+                    src, dst = moved
+                    self.k_pages = self._jit_copy_page(self.k_pages,
+                                                       src, dst)
+                    self.v_pages = self._jit_copy_page(self.v_pages,
+                                                       src, dst)
+                    self._event("cow", rid, pos=p, src=src, dst=dst)
+            # Attend only the pages the group can reach: the logical
+            # width is the widest request's page count, rounded up to a
+            # power of two (bounded retraces).  Short requests stream
+            # ceil(total/P) pages, not max_len positions — value-exact
+            # because masked tiles contribute exact zeros.
+            w_need = max(cdiv(self.reqs[rid]["total"], self.page_size)
+                         for rid in group)
+            w_use = min(self.table_w, 1 << max(w_need - 1, 0).bit_length())
+            tbl = np.zeros((len(group), w_use), np.int32)
+            for i, rid in enumerate(group):
+                t = self.pool.table_of(rid)
+                tbl[i, :len(t)] = t[:w_use]
+            toks = jnp.asarray([[self.reqs[rid]["token"]]
+                                for rid in group], jnp.int32)
+            logits, cache = self._jit_decode(
+                self.params, self.k_pages, self.v_pages,
+                jnp.asarray(tbl), toks, jnp.int32(p))
+            self.k_pages = cache["attn"]["k"]
+            self.v_pages = cache["attn"]["v"]
+            for i, rid in enumerate(group):
+                self._advance(rid, logits[i, -1], done)
+        return done
+
+    def _advance(self, rid, logit_row, done):
+        r = self.reqs[rid]
+        nxt = self._select(logit_row)
+        r["outputs"].append(nxt)
+        r["token"] = nxt
+        r["pos"] += 1
+        r["budget"] -= 1
+        # same finish rule as the dense Server -> bit-identical outputs
+        if r["budget"] <= 0 or r["pos"] >= self.max_len - 1:
+            done.append((rid, list(r["outputs"])))
+            self._event("done", rid, tokens=len(r["outputs"]),
+                        in_use=self.pool.pages_in_use)
+            self.pool.free_request(rid)
+            del self.reqs[rid]
+
+
 class AsrServer(_SlotPool):
     """Streaming-ASR slot pool for the paper's acoustic model.
 
@@ -359,7 +632,7 @@ class AsrServer(_SlotPool):
         (an empty utterance has nothing to decode)."""
         feats = np.asarray(feats, np.float32)
         n = len(feats)
-        if n > self.max_frames:
+        if n > prompt_capacity(self.max_frames, "asr"):
             self._event("reject", req_id, reason=PROMPT_TOO_LONG, frames=n)
             return AdmitResult(PROMPT_TOO_LONG)
         if n == 0:
@@ -488,6 +761,23 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=64,
                     help="cache capacity (LM) / max utterance frames "
                          "(ASR) per slot")
+    ap.add_argument("--cache", default="",
+                    choices=["", "dense", "paged"],
+                    help="LM KV-cache layout: dense per-slot rows or the "
+                         "paged page-pool server with prompt-prefix "
+                         "sharing (default: cfg.cache_mode)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="cache positions per KV page in --cache paged "
+                         "(0 = cfg.page_size; must divide --max-len)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="physical pages in the paged pool (0 = the "
+                         "dense-equivalent HBM: slots * max_len / "
+                         "page_size)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="LM mode: length of a common prompt prefix "
+                         "shared by all generated requests (exercises "
+                         "prefix sharing under --cache paged; 0 = fully "
+                         "random prompts)")
     ap.add_argument("--kernel-impl", default="jax",
                     choices=["jax", "pallas"],
                     help="kernels for prefill/the BLSTM forward AND the "
@@ -518,11 +808,24 @@ def main(argv=None):
         return _main_asr(cfg, args)
 
     rng = np.random.default_rng(0)
-    server = Server(cfg, slots=args.slots, max_len=args.max_len,
-                    kernel_impl=args.kernel_impl,
-                    batched=not args.sequential, verbose=True)
-    plen = min(args.prompt_len, args.max_len - 1)
-    pending = [(i, rng.integers(0, cfg.vocab, size=plen))
+    cache_mode = args.cache or cfg.cache_mode
+    if cache_mode == "paged":
+        page = args.page_size or cfg.page_size
+        pool_pages = args.pool_pages or args.slots * cdiv(args.max_len,
+                                                          page)
+        server = PagedServer(cfg, pool_pages=pool_pages, page_size=page,
+                             max_len=args.max_len,
+                             kernel_impl=args.kernel_impl, verbose=True)
+    else:
+        server = Server(cfg, slots=args.slots, max_len=args.max_len,
+                        kernel_impl=args.kernel_impl,
+                        batched=not args.sequential, verbose=True)
+    plen = min(args.prompt_len, prompt_capacity(args.max_len, "lm"))
+    shared = min(args.shared_prefix, plen)
+    prefix = rng.integers(0, cfg.vocab, size=shared)
+    pending = [(i, np.concatenate([prefix,
+                                   rng.integers(0, cfg.vocab,
+                                                size=plen - shared)]))
                for i in range(args.requests)]
     finished, t0, steps, occ = [], time.time(), 0, 0.0
     while pending or server.active.any():
@@ -532,16 +835,24 @@ def main(argv=None):
                 break
             pending.pop(0)      # admitted or terminally rejected (event
             # stream carries the per-request outcome either way)
-        occ += server.active.mean()
+        occ += (server.occupancy() if cache_mode == "paged"
+                else server.active.mean())
         finished += server.step()
         steps += 1
     dt = time.time() - t0
     toks = sum(len(o) for _, o in finished)
     # decoded tokens/s + occupancy: the shared throughput convention of
-    # launch/evaluate.py (occupancy = slot-pool utilization per wave)
+    # launch/evaluate.py (occupancy = slot-pool utilization per wave;
+    # paged mode reports page-pool utilization instead)
     print(f"served {len(finished)} requests, {toks} tokens, "
           f"{steps} decode waves in {dt:.1f}s ({toks/dt:.1f} tok/s, "
           f"occupancy {occ/max(steps, 1):.2f})")
+    if cache_mode == "paged":
+        print(f"[kv] pool={server.pool.n_pages} pages x "
+              f"{server.page_size} positions, peak "
+              f"sharing_ratio={server.peak_sharing:.3f}, "
+              f"cow={server.pool.n_cow}, "
+              f"shared_hits={server.pool.n_shared_hits}")
     for rid, out in finished:
         print(f"  req {rid}: {out[:8]}{'...' if len(out) > 8 else ''}")
 
@@ -551,7 +862,7 @@ def _main_asr(cfg, args):
     the data pipeline's length distribution, chunked beam decode."""
     from repro.data import make_dataset
 
-    seq_len = min(args.prompt_len, args.max_len)
+    seq_len = min(args.prompt_len, prompt_capacity(args.max_len, "asr"))
     ds = make_dataset(cfg, seq_len=seq_len, batch=max(args.requests, 1),
                       seed=0, var_len=True)
     batch = ds.batch_at(0)

@@ -71,13 +71,17 @@ class Model:
                           kernel_impl=kernel_impl)
 
     def decode_fn(self, params, cache, tokens, pos, *,
-                  long_context: bool = False, kernel_impl: str = "jax"):
+                  long_context: bool = False, kernel_impl: str = "jax",
+                  page_table=None, page_size: int = 0):
         fam = self.cfg.family
         if fam == "encdec":
+            if page_table is not None:
+                raise ValueError("paged KV cache: decoder-only families")
             return ED.decode_step(self.cfg, params, cache, tokens, pos)
         return TF.decode_step(self.cfg, params, cache, tokens, pos,
                               long_context=long_context,
-                              kernel_impl=kernel_impl)
+                              kernel_impl=kernel_impl,
+                              page_table=page_table, page_size=page_size)
 
     # --------------------------------------------------------------- specs
     def cache_specs(self, shape: ShapeConfig):
@@ -87,6 +91,11 @@ class Model:
             half = shape.seq_len // 2
             return ED.cache_specs(cfg, B, half, half)
         return TF.cache_specs(cfg, B, shape.seq_len)
+
+    def page_specs(self, n_pages: int, page_size: int):
+        """Paged decode-state specs (one shared page pool; serve.py
+        ``--cache paged``)."""
+        return TF.page_specs(self.cfg, n_pages, page_size)
 
     def input_specs(self, shape: ShapeConfig, mode: str = None):
         """ParamSpec tree of the model inputs for one assigned shape.

@@ -243,15 +243,42 @@ def _announce_pallas(tag):
         print(f"[attn] decode-attn path: pallas ({tag})", flush=True)
 
 
+def _gather_pages(pages, table):
+    """Physical pages (n_pages, P, KV, E) + table (B, W) → the logical
+    dense cache (B, W·P, KV, E).  The gathered array is value-identical
+    to a dense cache holding the same content, so the jax paged path is
+    bit-exact vs dense — the einsums see the same operands."""
+    n_pages, P, KV, E = pages.shape
+    B, W = table.shape
+    return pages[table].reshape(B, W * P, KV, E)
+
+
 def attn_decode(q, k_cache, v_cache, pos, *, window=None,
                 seq_shard: bool = False, impl: str = "jax",
-                interpret=None):
+                interpret=None, page_table=None, page_size: int = 0):
     """q: (B,1,H,E); caches: (B,S,KV,E) already containing the new token at
     index ``pos``.  Masks out positions > pos and outside the window.
 
     impl='pallas' streams the cache through the Pallas decode kernel
     (seq_shard stays on the jax path: the sharding constraints live
-    outside the kernel grid)."""
+    outside the kernel grid).
+
+    ``page_table`` (B, W) selects the PAGED cache layout: k/v are
+    physical page pools (n_pages, page_size, KV, E) and position t lives
+    at ``pages[table[b, t // P], t % P]``.  impl='pallas' walks the
+    table inside the kernel (scalar-prefetched index maps); the jax path
+    gathers the pages into the logical dense cache and reuses the dense
+    math unchanged."""
+    if page_table is not None:
+        if impl == "pallas" and not seq_shard:
+            from repro.kernels.decode_attention import paged_decode_attention
+
+            _announce_pallas("paged")
+            return paged_decode_attention(q, k_cache, v_cache, page_table,
+                                          pos, window=window,
+                                          interpret=interpret)
+        k_cache = _gather_pages(k_cache, page_table)
+        v_cache = _gather_pages(v_cache, page_table)
     if impl == "pallas" and not seq_shard:
         from repro.kernels.decode_attention import decode_attention
 
@@ -278,7 +305,8 @@ def attn_decode(q, k_cache, v_cache, pos, *, window=None,
 
 def attn_decode_delta(q, k_cache, v_cache, k_new, v_new, pos, *,
                       window=None, seq_shard: bool = False,
-                      impl: str = "jax", interpret=None):
+                      impl: str = "jax", interpret=None,
+                      page_table=None, page_size: int = 0):
     """Decode WITHOUT writing the cache first: attend over the old cache
     (positions < pos) plus an explicit extra column for the new token.
 
@@ -291,7 +319,23 @@ def attn_decode_delta(q, k_cache, v_cache, k_new, v_new, pos, *,
     impl='pallas' uses the fused kernel variant: the new-token column is
     folded into the online-softmax init, so the cache is read exactly once
     and the concat-and-resoftmax disappears.
+
+    ``page_table`` selects the paged cache layout exactly as in
+    :func:`attn_decode` (the decode hot path under ``--cache paged``:
+    the cache write happens OUTSIDE attention, so pages are read-only
+    here and prefix-shared pages need no special casing).
     """
+    if page_table is not None:
+        if impl == "pallas" and not seq_shard:
+            from repro.kernels.decode_attention import paged_decode_attention
+
+            _announce_pallas("paged-delta")
+            return paged_decode_attention(q, k_cache, v_cache, page_table,
+                                          pos, window=window,
+                                          k_new=k_new, v_new=v_new,
+                                          interpret=interpret)
+        k_cache = _gather_pages(k_cache, page_table)
+        v_cache = _gather_pages(v_cache, page_table)
     if impl == "pallas" and not seq_shard:
         from repro.kernels.decode_attention import decode_attention
 
@@ -329,6 +373,19 @@ def write_new_token(cache, new, pos, *, layer_stacked: bool = True):
     axis = 2 if layer_stacked else 1
     return jax.lax.dynamic_update_slice_in_dim(
         cache, new.astype(cache.dtype), pos, axis=axis)
+
+
+def write_new_token_paged(cache, new, page_table, pos, page_size: int):
+    """Paged counterpart of :func:`write_new_token`: cache is the page
+    pool (L, n_pages, P, KV, E), new (L, B, 1, KV, E); request b's new
+    column lands at physical ``(page_table[b, pos // P], pos % P)``.
+    One scatter per step, same as the dense single dynamic-update-slice.
+    COW happens host-side BEFORE this write (serving/kvpool.py), so the
+    target page is always exclusively owned."""
+    j = pos // page_size
+    off = pos % page_size
+    page_ids = jnp.take(page_table, j, axis=1)        # (B,)
+    return cache.at[:, page_ids, off].set(new[:, :, 0].astype(cache.dtype))
 
 
 def update_cache(cache, new, pos):

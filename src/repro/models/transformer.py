@@ -252,16 +252,44 @@ def cache_specs(cfg, batch: int, cache_len: int):
     raise ValueError(fam)
 
 
+def page_specs(cfg, n_pages: int, page_size: int):
+    """Paged decode-state specs: ONE pool of physical KV pages shared by
+    every in-flight request (serve.py ``--cache paged``) instead of a
+    per-slot (batch, cache_len) row.  Attention-only families."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"paged KV cache needs an attention-only family, "
+                         f"got {cfg.family}")
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("layers", "pages", "page_pos", "kv_heads", "head_dim")
+    return {"attn": {"k": ParamSpec(shape, "bfloat16", axes),
+                     "v": ParamSpec(shape, "bfloat16", axes)}}
+
+
 def decode_step(cfg, params, cache, tokens, pos, *, long_context: bool = False,
-                kernel_impl: str = "jax"):
+                kernel_impl: str = "jax", page_table=None, page_size: int = 0):
     """One-token decode.  tokens: (B,1) int32, pos: scalar int32 position of
     the new token.  Returns (logits (B,1,V), new cache).
 
     kernel_impl='pallas' routes the per-layer attention through the fused
-    Pallas decode kernel (cfg.attn_decode_impl overrides when set)."""
+    Pallas decode kernel (cfg.attn_decode_impl overrides when set).
+
+    ``page_table`` (B, W) selects the PAGED cache layout (serve.py
+    ``--cache paged``): cache['attn'] k/v are page pools
+    (L, n_pages, page_size, KV, E) shared across requests, the attention
+    walks the table, and the new-token column scatters into the table's
+    page for ``pos`` (the page is exclusively owned — COW runs host-side
+    first).  Attention-only families; SSM/hybrid state is per-slot O(1)
+    and has nothing to page."""
     fam = cfg.family
-    S_cache = (cache["attn"]["k"].shape[2] if "attn" in cache
-               else (1 << 30))
+    paged = page_table is not None
+    if paged and fam not in ("dense", "moe", "vlm"):
+        raise ValueError(f"paged KV cache needs an attention-only family, "
+                         f"got {fam}")
+    if paged:
+        S_cache = page_table.shape[-1] * page_size   # logical length
+    else:
+        S_cache = (cache["attn"]["k"].shape[2] if "attn" in cache
+                   else (1 << 30))
     windows = jnp.asarray(layer_windows(cfg, S_cache,
                                         long_context=long_context))
     x = embed_tokens(cfg, params, tokens)
@@ -274,7 +302,8 @@ def decode_step(cfg, params, cache, tokens, pos, *, long_context: bool = False,
         o = A.attn_decode_delta(q, cache_l["attn"]["k"],
                                 cache_l["attn"]["v"], k, v, pos,
                                 window=window, seq_shard=seq_shard,
-                                impl=attn_impl)
+                                impl=attn_impl, page_table=page_table,
+                                page_size=page_size)
         return A.out_project(p, o), {"k": k, "v": v}   # new-token rows only
 
     def layer(x, scanned):
@@ -310,12 +339,22 @@ def decode_step(cfg, params, cache, tokens, pos, *, long_context: bool = False,
     # the full caches never flow through the layer scan as outputs.
     new_cache = dict(cache)
     if "attn" in deltas:
-        new_cache["attn"] = {
-            "k": A.write_new_token(cache["attn"]["k"], deltas["attn"]["k"],
-                                   pos),
-            "v": A.write_new_token(cache["attn"]["v"], deltas["attn"]["v"],
-                                   pos),
-        }
+        if paged:
+            new_cache["attn"] = {
+                "k": A.write_new_token_paged(cache["attn"]["k"],
+                                             deltas["attn"]["k"],
+                                             page_table, pos, page_size),
+                "v": A.write_new_token_paged(cache["attn"]["v"],
+                                             deltas["attn"]["v"],
+                                             page_table, pos, page_size),
+            }
+        else:
+            new_cache["attn"] = {
+                "k": A.write_new_token(cache["attn"]["k"],
+                                       deltas["attn"]["k"], pos),
+                "v": A.write_new_token(cache["attn"]["v"],
+                                       deltas["attn"]["v"], pos),
+            }
     if "ssm" in deltas:
         new_cache["ssm"] = deltas["ssm"]   # O(1)-size states, stacked by scan
     x = apply_norm(params["final_norm"], x)

@@ -11,9 +11,10 @@ sleeps; reproducible in tests), with a wall-clock mode for benches.
 """
 from repro.serving.admission import (NO_BUDGET, OK, POOL_FULL,   # noqa: F401
                                      PROMPT_TOO_LONG, AdmissionController,
-                                     AdmitResult, Job)
+                                     AdmitResult, Job, prompt_capacity)
 from repro.serving.capacity import (run_level,                   # noqa: F401
                                     sustained_capacity)
+from repro.serving.kvpool import PageAlloc, PagePool             # noqa: F401
 from repro.serving.loop import (CostModel, ServingLoop,          # noqa: F401
                                 VirtualClock, WallClock)
 from repro.serving.slo import (Recorder, RequestEvents,          # noqa: F401

@@ -70,6 +70,26 @@ class AdmitResult:
 ADMITTED = AdmitResult(OK)
 
 
+def prompt_capacity(max_len: int, mode: str) -> int:
+    """The documented LM/ASR payload-capacity contract, hoisted from the
+    two former call-site magic numbers (serve.py's clamp and the
+    servers' admit validation must agree or a clamped payload is
+    terminally rejected):
+
+    * ``lm``  — a slot holds ``max_len`` cache positions but ONE is
+      reserved for the first generated token the prefill emits, so the
+      prompt may fill at most ``max_len - 1``.
+    * ``asr`` — the whole posterior buffer is decodable: an utterance
+      may fill all ``max_len`` frames (nothing is generated into the
+      buffer).
+    """
+    if mode == "lm":
+        return max_len - 1
+    if mode == "asr":
+        return max_len
+    raise ValueError(f"unknown payload mode {mode!r}")
+
+
 @dataclass(eq=False)
 class Job:
     """One request's life in the controller: queued -> running

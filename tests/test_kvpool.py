@@ -1,0 +1,284 @@
+"""Host-side page-pool semantics (repro.serving.kvpool): refcounted
+allocation, prompt-prefix trie sharing, COW reservations, trie trimming
+on in-place writes, drain, and a randomized property test that hammers
+``PagePool.check()`` over arbitrary alloc/share/write/free/preempt
+interleavings (a hypothesis variant runs where hypothesis is
+installed; the seeded fuzzer below covers the container without it)."""
+import numpy as np
+import pytest
+
+from repro.serving.kvpool import PageAlloc, PagePool, cdiv, prefix_digests
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _prompt(rng, n, vocab=64):
+    return [int(t) for t in rng.integers(0, vocab, size=n)]
+
+
+# ---------------------------------------------------------------------------
+# digests
+# ---------------------------------------------------------------------------
+
+def test_prefix_digests_chain():
+    """h_n depends on the whole prefix and chaining from h_lo matches
+    the from-scratch digest of the same prefix."""
+    toks = [3, 1, 4, 1, 5, 9]
+    full = prefix_digests(toks)
+    assert len(full) == len(toks)
+    assert len(set(full)) == len(toks)
+    tail = prefix_digests(toks, lo=2, prev=full[1])
+    assert tail == full[2:]
+    # a different token anywhere changes every later digest
+    other = prefix_digests([3, 1, 4, 1, 5, 8])
+    assert other[:5] == full[:5] and other[5] != full[5]
+
+
+# ---------------------------------------------------------------------------
+# allocation / sharing / COW
+# ---------------------------------------------------------------------------
+
+def test_alloc_basic_and_free():
+    pool = PagePool(8, 4)
+    a = pool.alloc_request(0, _prompt(np.random.default_rng(0), 6), 10)
+    assert isinstance(a, PageAlloc)
+    assert a.n_pages == cdiv(10, 4) == 3 and all(a.owned)
+    assert pool.pages_in_use == 3 and pool.free_pages == 5
+    assert pool.table_of(0) == a.table
+    pool.check()
+    pool.free_request(0)
+    assert pool.pages_in_use == 0 and pool.free_pages == 8
+    pool.check()
+
+
+def test_identical_prompts_share_full_and_partial_pages():
+    pool = PagePool(16, 4)
+    rng = np.random.default_rng(1)
+    prompt = _prompt(rng, 6)          # 1 full page + 1 partial (pos 4..5)
+    a0 = pool.alloc_request(0, prompt, 8)
+    assert a0.n_shared == 0
+    a1 = pool.alloc_request(1, prompt, 8)
+    # both prompt pages shared (incl. the partial tail page)
+    assert a1.n_shared == 2
+    assert a1.table[:2] == a0.table[:2]
+    assert a1.owned == [False, False]
+    assert pool.sharing_ratio > 0 and pool.n_shared_hits == 2
+    # the shared partial page reserved a COW page: admission accounting
+    assert pool.reserved_pages == 1
+    pool.check()
+
+
+def test_shorter_prompt_shares_longer_prefix_tail():
+    """Digests are registered for every covered prefix length, so a
+    4-token prompt shares the page of a 6-token one."""
+    pool = PagePool(16, 4)
+    long = [7, 7, 7, 7, 5, 5]
+    a0 = pool.alloc_request(0, long, 8)
+    a1 = pool.alloc_request(1, long[:4], 6)
+    assert a1.n_shared == 1 and a1.table[0] == a0.table[0]
+    pool.check()
+
+
+def test_divergent_prompts_do_not_share():
+    pool = PagePool(16, 4)
+    pool.alloc_request(0, [1, 2, 3, 4, 5], 8)
+    a1 = pool.alloc_request(1, [1, 2, 3, 9, 5], 8)  # diverges inside page 0
+    assert a1.n_shared == 0
+    pool.check()
+
+
+def test_cow_on_shared_partial_page_uses_reservation():
+    pool = PagePool(8, 4)
+    prompt = [2, 2, 2, 2, 3, 3]       # page 1 partial at pos 4..5
+    pool.alloc_request(0, prompt, 8)
+    pool.alloc_request(1, prompt, 8)
+    assert pool.reserved_pages == 1
+    t0_before = pool.table_of(1)
+    moved = pool.ensure_writable(1, 6)      # first write past the prompt
+    assert moved is not None
+    old, new = moved
+    assert old == t0_before[1] and pool.table_of(1)[1] == new
+    assert pool.owned_of(1)[1] is True
+    assert pool.reserved_pages == 0 and pool.n_cow == 1
+    # sole remaining holder of the old page: no further COW
+    assert pool.ensure_writable(0, 6) is None
+    pool.check()
+
+
+def test_owner_write_first_consumes_sharers_reservation():
+    """The page's original owner never reserves; when it writes FIRST
+    into the shared partial page, the COW consumes the sharer's
+    reservation (any reservation tied to that physical page covers one
+    of its refcount-1 pending copies) — proven here with zero
+    unreserved free pages, where the old guard would raise."""
+    pool = PagePool(3, 4)
+    prompt = [1, 1, 1, 1, 2, 2]
+    pool.alloc_request(0, prompt, 8)          # owner: pages 0, 1
+    pool.alloc_request(1, prompt, 8)          # shares both, reserves 1
+    assert pool.free_pages == 0 and pool.reserved_pages == 1
+    moved = pool.ensure_writable(0, 6)        # OWNER writes first
+    assert moved is not None and pool.n_cow == 1
+    assert pool.reserved_pages == 0
+    # the sharer, now sole holder, writes in place
+    assert pool.ensure_writable(1, 6) is None
+    pool.check()
+    pool.free_request(0)
+    pool.free_request(1)
+    assert pool.pages_in_use == 0
+    pool.check()
+
+
+def test_sole_owner_write_trims_trie():
+    """After the owner writes decode output into its partial prompt
+    page, a later identical prompt may share only up to the write."""
+    pool = PagePool(16, 4)
+    prompt = [9, 9, 9, 9, 1, 1]
+    pool.alloc_request(0, prompt, 12)
+    assert pool.ensure_writable(0, 6) is None   # in-place, trims > 6... no:
+    # keep_upto=6 keeps n<=6; the 5..6 prefixes survive, nothing longer
+    a1 = pool.alloc_request(1, prompt, 8)
+    assert a1.n_shared == 2                     # both pages still shareable
+    pool.free_request(1)
+    assert pool.ensure_writable(0, 4) is None   # overwrite pos 4
+    a2 = pool.alloc_request(2, prompt, 8)
+    assert a2.n_shared == 1                     # page-1 prefixes trimmed
+    pool.check()
+
+
+def test_pool_full_and_all_or_nothing():
+    pool = PagePool(4, 4)
+    assert pool.alloc_request(0, [1] * 4, 12) is not None    # 3 pages
+    # 2 pages needed, 1 free -> None, and NOTHING was allocated
+    assert pool.alloc_request(1, [2] * 5, 8) is None
+    assert pool.pages_in_use == 3 and 1 not in pool._reqs
+    # reservation counts against admission: identical partial-page share
+    pool.free_request(0)
+    prompt = [3, 3, 3, 3, 3, 3]
+    pool.alloc_request(2, prompt, 8)            # 2 pages
+    pool.alloc_request(3, prompt, 8)            # shares 2, reserves 1
+    # free: 4 - 2 owned = 2 minus 1 reserved -> 1 page truly free
+    assert pool.free_pages == 1
+    assert pool.alloc_request(4, [4] * 3, 8) is None          # needs 2
+    pool.check()
+
+
+def test_restore_path_never_shares_decode_pages():
+    """written_upto > plen (restore of a mid-decode request): the
+    partial page holds decode output, so only fully-prompt pages may
+    share."""
+    pool = PagePool(16, 4)
+    prompt = [5] * 6
+    pool.alloc_request(0, prompt, 12)
+    # restore a request already decoded to pos 7: page 1 holds output
+    a = pool.alloc_request(1, prompt, 12, written_upto=7)
+    assert a.n_shared == 1 and a.owned[1:] == [True, True]
+    pool.check()
+
+
+def test_errors():
+    pool = PagePool(4, 4)
+    pool.alloc_request(0, [1], 4)
+    with pytest.raises(KeyError):
+        pool.alloc_request(0, [1], 4)
+    with pytest.raises(ValueError):
+        pool.alloc_request(1, [], 4)
+    with pytest.raises(ValueError):
+        pool.alloc_request(1, [1, 2], 1)
+    with pytest.raises(IndexError):
+        pool.ensure_writable(0, 4)
+    with pytest.raises(ValueError):
+        PagePool(0, 4)
+
+
+def test_reset_drains_and_reseeds():
+    pool = PagePool(8, 4, seed=3)
+    first = pool.alloc_request(0, [1, 2, 3], 6).table
+    pool.alloc_request(1, [4, 5, 6], 6)
+    pool.reset()
+    assert pool.pages_in_use == 0 and pool.free_pages == 8
+    assert pool.alloc_request(0, [1, 2, 3], 6).table == first
+    pool.check()
+
+
+def test_seeded_alloc_order_deterministic():
+    tables = []
+    for _ in range(2):
+        pool = PagePool(8, 4, seed=7)
+        t = pool.alloc_request(0, [1, 2, 3, 4, 5], 8).table
+        t += pool.alloc_request(1, [9, 9], 4).table
+        tables.append(t)
+    assert tables[0] == tables[1]
+
+
+# ---------------------------------------------------------------------------
+# property test: arbitrary interleavings never leak or double-free
+# ---------------------------------------------------------------------------
+
+def _run_ops(ops, n_pages=6, page_size=4):
+    """Interpret a flat op list against a pool, asserting invariants
+    after every operation.  ops: (kind, a, b) with kind in 0..3."""
+    pool = PagePool(n_pages, page_size, seed=1)
+    live = {}                    # rid -> (prompt, total, next write pos)
+    next_rid = 0
+    prompts = [[1, 1, 1, 1, 1, 1], [1, 1, 1, 1, 2, 2], [3, 3, 3],
+               [1, 1, 1, 1, 1, 1, 1, 1]]
+    for kind, a, b in ops:
+        if kind == 0:            # alloc
+            prompt = prompts[a % len(prompts)]
+            total = min(len(prompt) + 1 + b % 6, 3 * page_size)
+            alloc = pool.alloc_request(next_rid, prompt, total)
+            if alloc is not None:
+                assert len(alloc.table) == cdiv(total, page_size)
+                live[next_rid] = [prompt, total, len(prompt)]
+                next_rid += 1
+        elif kind == 1 and live:  # write the next position (maybe COW)
+            rid = sorted(live)[a % len(live)]
+            prompt, total, pos = live[rid]
+            if pos < total:
+                pool.ensure_writable(rid, pos)
+                live[rid][2] = pos + 1
+        elif kind == 2 and live:  # free
+            rid = sorted(live)[a % len(live)]
+            pool.free_request(rid)
+            del live[rid]
+        elif kind == 3 and live:  # preempt + immediate restore attempt
+            rid = sorted(live)[a % len(live)]
+            prompt, total, pos = live[rid]
+            pool.free_request(rid)
+            del live[rid]
+            alloc = pool.alloc_request(next_rid, prompt, total,
+                                       written_upto=pos)
+            if alloc is not None:
+                live[next_rid] = [prompt, total, pos]
+                next_rid += 1
+        pool.check()
+        assert pool.total_refs == sum(
+            len(pool.table_of(r)) for r in live)
+    for rid in list(live):
+        pool.free_request(rid)
+    pool.check()
+    assert pool.pages_in_use == 0 and pool.total_refs == 0
+    assert pool.free_pages == n_pages and not pool._trie
+
+
+def test_pool_property_seeded_fuzz():
+    """300 random interleavings of alloc/write/free/preempt-restore:
+    ``check()`` holds after every op and a full drain leaks nothing."""
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 8)),
+                int(rng.integers(0, 8))) for _ in range(30)]
+        _run_ops(ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                              st.integers(0, 7)), max_size=40))
+    def test_pool_property_hypothesis(ops):
+        _run_ops(ops)

@@ -1,0 +1,188 @@
+"""Paged decode attention (docs/kernels.md §Paged decode): the Pallas
+page-table kernel vs the dense kernel and the jax gather reference.
+
+The paged kernel shares ``_attend_tile`` verbatim with the dense one
+and page tiles are physically exact (no ragged padding), so paged
+output over CONTIGUOUS pages is required to be BIT-exact vs dense at
+``block_s = page_size`` — not merely within tolerance — and shuffled
+physical pages must be bit-exact vs contiguous ones."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import (auto_block_s_decode,
+                                            decode_attn_vmem_bytes,
+                                            decode_attention,
+                                            paged_attn_vmem_bytes,
+                                            paged_decode_attention)
+from repro.models import attention as A
+
+TOL = 2e-5
+
+
+def _setup(seed, B, S, KV, M, E):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    H = KV * M
+    q = jax.random.normal(ks[0], (B, 1, H, E), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, KV, E), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, KV, E), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, 1, KV, E), jnp.float32)
+    vn = jax.random.normal(ks[4], (B, 1, KV, E), jnp.float32)
+    return q, kc, vc, kn, vn
+
+
+def _paginate(kc, P, perm=None):
+    """Dense (B, S, KV, E) -> pages (B*W, P, KV, E) + table (B, W),
+    optionally placing logical pages at permuted physical slots."""
+    B, S, KV, E = kc.shape
+    W = S // P
+    pages = np.asarray(kc).reshape(B * W, P, KV, E)
+    table = np.arange(B * W, dtype=np.int32).reshape(B, W)
+    if perm is not None:
+        pages = pages[np.argsort(perm)]
+        table = np.asarray(perm, np.int32).reshape(B, W)
+    return jnp.asarray(pages), jnp.asarray(table)
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 9])
+@pytest.mark.parametrize("M", [1, 2])
+def test_paged_contiguous_bitexact_vs_dense(window, M):
+    B, S, KV, E, P = 2, 32, 2, 8, 8
+    q, kc, vc, _, _ = _setup(0, B, S, KV, M, E)
+    kp, tbl = _paginate(kc, P)
+    vp, _ = _paginate(vc, P)
+    for pos in (0, 13, S - 1):
+        dense = decode_attention(q, kc, vc, jnp.int32(pos), window=window,
+                                 block_s=P, interpret=True)
+        paged = paged_decode_attention(q, kp, vp, tbl, jnp.int32(pos),
+                                       window=window, interpret=True)
+        assert np.array_equal(np.asarray(paged), np.asarray(dense)), \
+            f"paged != dense bit-for-bit at pos={pos}"
+        ref = A.attn_decode(q, kc, vc, jnp.int32(pos), window=window)
+        err = float(jnp.max(jnp.abs(paged - ref))
+                    / jnp.max(jnp.abs(ref)))
+        assert err < TOL
+
+
+def test_paged_shuffled_pages_bitexact_vs_contiguous():
+    """The physical placement of pages is invisible: a shuffled pool
+    walked through its table equals the contiguous layout exactly."""
+    B, S, KV, M, E, P = 2, 32, 2, 2, 8, 8
+    q, kc, vc, _, _ = _setup(1, B, S, KV, M, E)
+    kp, tbl = _paginate(kc, P)
+    vp, _ = _paginate(vc, P)
+    perm = np.random.default_rng(3).permutation(B * (S // P))
+    kp2, tbl2 = _paginate(kc, P, perm=perm)
+    vp2, _ = _paginate(vc, P, perm=perm)
+    pos = jnp.int32(21)
+    a = paged_decode_attention(q, kp, vp, tbl, pos, interpret=True)
+    b = paged_decode_attention(q, kp2, vp2, tbl2, pos, interpret=True)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("window", [None, 7])
+def test_paged_delta_bitexact_vs_dense_delta(window):
+    B, S, KV, M, E, P = 2, 32, 2, 2, 8, 8
+    q, kc, vc, kn, vn = _setup(2, B, S, KV, M, E)
+    kp, tbl = _paginate(kc, P)
+    vp, _ = _paginate(vc, P)
+    for pos in (0, 13, S - 1):
+        dense = decode_attention(q, kc, vc, jnp.int32(pos), window=window,
+                                 k_new=kn, v_new=vn, block_s=P,
+                                 interpret=True)
+        paged = paged_decode_attention(q, kp, vp, tbl, jnp.int32(pos),
+                                       window=window, k_new=kn, v_new=vn,
+                                       interpret=True)
+        assert np.array_equal(np.asarray(paged), np.asarray(dense))
+        ref = A.attn_decode_delta(q, kc, vc, kn, vn, jnp.int32(pos),
+                                  window=window)
+        err = float(jnp.max(jnp.abs(paged - ref))
+                    / jnp.max(jnp.abs(ref)))
+        assert err < TOL
+
+
+def test_padded_table_tail_is_ignored():
+    """Table entries beyond the request's pages may point anywhere
+    valid: tiles starting above pos are skipped, so junk padding does
+    not change the output (the masked-tile zero-identity contract that
+    also licenses the server's table-width slicing)."""
+    B, S, KV, M, E, P = 1, 32, 2, 2, 8, 8
+    q, kc, vc, _, _ = _setup(3, B, S, KV, M, E)
+    kp, tbl = _paginate(kc, P)
+    pos = jnp.int32(P - 1)                   # only page 0 is reachable
+    vp, _ = _paginate(vc, P)
+    a = paged_decode_attention(q, kp, vp, tbl, pos, interpret=True)
+    junk = np.asarray(tbl).copy()
+    junk[0, 1:] = [3, 0, 2]                  # garbage (valid ids) tail
+    b = paged_decode_attention(q, kp, vp, jnp.asarray(junk), pos,
+                               interpret=True)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    # and a 1-wide table (the sliced wave) matches too
+    c = paged_decode_attention(q, kp, vp, jnp.asarray(junk[:, :1]), pos,
+                               interpret=True)
+    assert np.array_equal(np.asarray(a), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# model-level dispatch (attention.attn_decode / write)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 9])
+def test_attn_decode_paged_jax_bitexact_vs_dense(window):
+    """The jax paged path gathers pages through the table and runs the
+    dense math on identical operand values — bit-exact vs dense."""
+    B, S, KV, M, E, P = 2, 32, 2, 2, 8, 8
+    q, kc, vc, kn, vn = _setup(4, B, S, KV, M, E)
+    perm = np.random.default_rng(5).permutation(B * (S // P))
+    kp, tbl = _paginate(kc, P, perm=perm)
+    vp, _ = _paginate(vc, P, perm=perm)
+    pos = jnp.int32(17)
+    dense = A.attn_decode(q, kc, vc, pos, window=window)
+    paged = A.attn_decode(q, kp, vp, pos, window=window,
+                          page_table=tbl, page_size=P)
+    assert np.array_equal(np.asarray(paged), np.asarray(dense))
+    ddense = A.attn_decode_delta(q, kc, vc, kn, vn, pos, window=window)
+    dpaged = A.attn_decode_delta(q, kp, vp, kn, vn, pos, window=window,
+                                 page_table=tbl, page_size=P)
+    assert np.array_equal(np.asarray(dpaged), np.asarray(ddense))
+
+
+def test_write_new_token_paged_lands_at_page_offset():
+    L, B, S, KV, E, P = 2, 2, 32, 2, 8, 8
+    perm = np.random.default_rng(6).permutation(B * (S // P))
+    table = np.asarray(perm, np.int32).reshape(B, S // P)
+    pages = jnp.zeros((L, B * (S // P), P, KV, E), jnp.float32)
+    new = jnp.asarray(np.random.default_rng(7).normal(
+        size=(L, B, 1, KV, E)), jnp.float32)
+    pos = 13                                  # page 1, offset 5
+    out = np.asarray(A.write_new_token_paged(
+        pages, new, jnp.asarray(table), jnp.int32(pos), P))
+    for b in range(B):
+        phys = table[b, pos // P]
+        np.testing.assert_array_equal(out[:, phys, pos % P],
+                                      np.asarray(new)[:, b, 0])
+    # nothing else was touched
+    touched = {int(table[b, pos // P]) for b in range(B)}
+    for pg in range(out.shape[1]):
+        if pg not in touched:
+            assert not out[:, pg].any()
+
+
+# ---------------------------------------------------------------------------
+# VMEM accounting
+# ---------------------------------------------------------------------------
+
+def test_paged_vmem_accounting_and_page_pinning():
+    M, E, P = 2, 8, 8
+    assert paged_attn_vmem_bytes(P, M, E, table_elems=16) == \
+        decode_attn_vmem_bytes(P, M, E) + 4 * (16 + 2)
+    # paged mode pins the tile to the page regardless of S
+    assert auto_block_s_decode(4096, M, E, page_size=P) == P
+    with pytest.raises(ValueError):
+        auto_block_s_decode(4096, M, E, page_size=1 << 20,
+                            vmem_budget=1 << 20)

@@ -1,0 +1,201 @@
+"""PagedServer contracts (docs/serving.md §KV paging): paged decode
+equals the dense Server bit-for-bit, prefix sharing and COW never
+change outputs, preempt-then-restore is exact, typed admission fires
+``no_budget`` for real page budgets, and ``reset`` drains the pool."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.serving.admission import (NO_BUDGET, POOL_FULL, PROMPT_TOO_LONG,
+                                     AdmissionController, Recorder)
+from repro.serving.workload import Request
+
+
+def _cfg():
+    return get_arch("smollm-360m").reduced()
+
+
+def _mk_paged(cfg, **kw):
+    from repro.launch.serve import PagedServer
+
+    kw.setdefault("pool_pages", 12)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_len", 16)
+    return PagedServer(cfg, **kw)
+
+
+def _prompts(n, plen, vocab, shared=0, seed=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=shared)
+    return [np.concatenate([prefix,
+                            rng.integers(0, vocab, size=plen - shared)])
+            for _ in range(n)]
+
+
+def _serve(server, prompts, max_new):
+    for i, p in enumerate(prompts):
+        assert server.admit(i, p, max_new), f"admit {i} failed"
+    done = []
+    while server.active.any():
+        done += server.step()
+    return dict(done)
+
+
+# ---------------------------------------------------------------------------
+# parity vs the dense server
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_paged_outputs_equal_dense(impl):
+    """Same prompts, same budget: the paged server's outputs are
+    bit-identical to the dense slot server's on both kernel impls
+    (same grouping rule, same finish rule, value-exact attention)."""
+    from repro.launch.serve import Server
+
+    cfg = _cfg()
+    n, max_new = (2, 3) if impl == "pallas" else (3, 5)
+    prompts = _prompts(n, 6, cfg.vocab)
+    dense = _serve(Server(cfg, slots=n, max_len=16, kernel_impl=impl),
+                   prompts, max_new)
+    paged = _serve(_mk_paged(cfg, kernel_impl=impl), prompts, max_new)
+    assert paged == dense
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_prefix_shared_equals_unshared(impl):
+    """Trie sharing + COW are invisible to outputs: a sharing pool and
+    a share=False pool produce bit-identical tokens for prompts with a
+    common prefix that splits a page (forcing COW on the partial)."""
+    cfg = _cfg()
+    n, max_new = (2, 3) if impl == "pallas" else (3, 4)
+    prompts = _prompts(n, 6, cfg.vocab, shared=6, seed=1)  # identical
+    shared_srv = _mk_paged(cfg, kernel_impl=impl)
+    got = _serve(shared_srv, prompts, max_new)
+    assert shared_srv.peak_sharing > 0, "no sharing detected"
+    assert any(k == "cow" for k, _, _ in shared_srv.events), \
+        "identical prompts splitting a page must COW on first write"
+    unshared = _serve(_mk_paged(cfg, kernel_impl=impl, share=False),
+                      prompts, max_new)
+    assert got == unshared
+    # and identical prompts decode identical continuations
+    outs = list(got.values())
+    assert all(o == outs[0] for o in outs)
+
+
+def test_shuffled_pool_seed_equals_default():
+    """Physical page placement is invisible: a seed-permuted free list
+    (same params) yields bit-identical outputs."""
+    from repro.serving.kvpool import PagePool
+
+    cfg = _cfg()
+    prompts = _prompts(3, 5, cfg.vocab, seed=2)
+    a = _serve(_mk_paged(cfg), prompts, 4)
+    shuffled = _mk_paged(cfg)
+    shuffled.pool = PagePool(12, 4, seed=11)   # permuted free list only
+    b = _serve(shuffled, prompts, 4)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# preempt / restore
+# ---------------------------------------------------------------------------
+
+def test_preempt_restore_bit_exact():
+    """Preempt mid-decode, restore, finish: outputs equal the
+    uninterrupted run's — including when the restore re-shares prompt
+    pages through the trie."""
+    cfg = _cfg()
+    prompts = _prompts(2, 6, cfg.vocab, shared=6, seed=3)
+    ref = _serve(_mk_paged(cfg), prompts, 5)
+
+    server = _mk_paged(cfg)
+    for i, p in enumerate(prompts):
+        assert server.admit(i, p, 5)
+    done = dict(server.step())           # one wave, then evict rid 1
+    snap = server.preempt(1)
+    assert 1 not in server.reqs
+    done.update(server.step())           # rid 0 advances alone
+    assert server.restore(snap)
+    while server.active.any():
+        done.update(server.step())
+    assert done == ref
+
+
+def test_restore_into_full_pool_is_pool_full():
+    cfg = _cfg()
+    server = _mk_paged(cfg, pool_pages=4)
+    [p0, p1] = _prompts(2, 6, cfg.vocab, seed=4)
+    assert server.admit(0, p0, 6)        # 3 pages of 4 (total 12)
+    snap = server.preempt(0)
+    assert server.admit(1, p1, 6)        # takes 3 of 4 pages
+    res = server.restore(snap)
+    assert not res and res.reason == POOL_FULL
+    # free the blocker; restore now succeeds and finishes cleanly
+    server.preempt(1)
+    assert server.restore(snap)
+    while server.active.any():
+        server.step()
+    assert server.pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# typed admission on the page budget
+# ---------------------------------------------------------------------------
+
+def test_typed_admission_no_budget_and_pool_full():
+    cfg = _cfg()
+    # max_len 16 needs 4 pages worst-case; a 3-page pool can NEVER fit
+    # a full-length request -> terminal no_budget (not pool_full)
+    server = _mk_paged(cfg, pool_pages=3)
+    long_prompt = _prompts(1, 14, cfg.vocab, seed=5)[0]
+    res = server.admit(0, long_prompt, 8)        # total = 16 -> 4 pages
+    assert res.reason == NO_BUDGET
+    assert server.admit(1, long_prompt, 0).reason == NO_BUDGET
+    too_long = _prompts(1, 16, cfg.vocab, seed=5)[0]
+    assert server.admit(2, too_long, 1).reason == PROMPT_TOO_LONG
+    # a fitting request admits; a second one finds the pool full
+    assert server.admit(3, _prompts(1, 9, cfg.vocab, seed=6)[0], 3)
+    res = server.admit(4, _prompts(1, 9, cfg.vocab, seed=7)[0], 3)
+    assert res.reason == POOL_FULL
+    kinds = {(k, kw.get("reason")) for k, _, kw in server.events
+             if k == "reject"}
+    assert ("reject", NO_BUDGET) in kinds
+    assert ("reject", PROMPT_TOO_LONG) in kinds
+
+
+def test_controller_routes_paged_rejections():
+    """Through the AdmissionController: no_budget is terminal (the job
+    is dropped and recorded), pool_full keeps the job queued."""
+    cfg = _cfg()
+    server = _mk_paged(cfg, pool_pages=3)
+    rec = Recorder()
+    ctl = AdmissionController(server, n_tiers=1, preempt=False,
+                              recorder=rec)
+
+    def req(rid, length, max_new=3):
+        return Request(rid=rid, arrival=0.0, length=length, tier=0,
+                       max_new=max_new, patience=100.0, deadline=1.0)
+
+    ctl.offer(req(0, 14, max_new=8), _prompts(1, 14, cfg.vocab)[0])
+    ctl.offer(req(1, 9), _prompts(1, 9, cfg.vocab, seed=8)[0])
+    ctl.offer(req(2, 9), _prompts(1, 9, cfg.vocab, seed=9)[0])
+    assert ctl.pump(0.0) == 1            # rid 0 rejected, rid 1 admitted
+    assert rec.events[0].outcome == "rejected"
+    assert rec.events[0].reject_reason == NO_BUDGET
+    assert ctl.backlog() == 1            # rid 2 waits on pool_full
+    while server.active.any():
+        ctl.on_wave(server.step(), [], 0.0)
+        ctl.pump(0.0)
+    assert ctl.backlog() == 0 and 2 in ctl.running or not ctl.running
+
+
+def test_reset_drains_pool_and_reuses_server():
+    cfg = _cfg()
+    server = _mk_paged(cfg)
+    prompts = _prompts(2, 6, cfg.vocab, seed=10)
+    first = _serve(server, prompts, 4)
+    assert server.pool.pages_in_use == 0     # all freed at done
+    server.reset()
+    assert server.pool.pages_in_use == 0 and not server.reqs
+    assert not server.events and server.peak_sharing == 0.0
+    assert _serve(server, prompts, 4) == first   # deterministic replay
