@@ -34,6 +34,7 @@ def all_benches():
         ("serve_microbench", _serve_microbench),
         ("paged_kv", _paged_microbench),
         ("load_capacity", _load_capacity),
+        ("obs_overhead", _obs_overhead),
     ]
 
 
@@ -785,10 +786,96 @@ def _load_capacity():
     return rows
 
 
+def _obs_overhead():
+    """Observability instrumentation overhead on the training step
+    (docs/observability.md; acceptance: <= 3%).
+
+    One jitted reduced-BLSTM AD-PSGD step, timed per step (blocked), in
+    three arms: **plain** (bare loop), **noop** (the exact per-step
+    call sites of launch/train.py — a span plus the ``obs.enabled()``
+    guard — against the disabled no-op default), and **live** (the same
+    sites with a configured registry + flight recorder: scalar float
+    pulls, one event, histogram/counter/gauge updates per step).  Rows
+    are medians, so one GC pause cannot fail the gate."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro import obs
+    from repro.configs import get_arch
+    from repro.core import strategies as ST
+    from repro.core.transport import Transport
+    from repro.data import make_dataset
+    from repro.models import build_model
+    from repro.optim.optimizers import sgd
+    from repro.optim.schedules import constant
+    from repro.sharding import init_spec_tree
+
+    L, steps, batch = 2, 30, 16
+    cfg = dataclasses.replace(get_arch("swb2000-blstm").reduced(),
+                              n_layers=1, lstm_hidden=64,
+                              lstm_bottleneck=32, input_dim=32, vocab=64)
+    model = build_model(cfg)
+    strategy = ST.get_strategy("ad_psgd")
+    transport = Transport(topology="ring")
+    ds = make_dataset(cfg, seq_len=21, batch=batch, seed=0)
+    step = jax.jit(ST.make_train_step(
+        strategy, model.loss_fn, sgd(), constant(0.05),
+        n_learners=L, transport=transport))
+    batches = [ds.batch_at(k) for k in range(steps + 1)]
+
+    def run(instrumented: bool):
+        params = ST.stack_for_learners(
+            init_spec_tree(model.param_specs(), jax.random.PRNGKey(0)), L)
+        state = ST.init_state(strategy, params, sgd(), transport)
+        state, _ = step(state, batches[0])          # compile outside
+        jax.block_until_ready(state)                # the timed loop
+        times = []
+        for k in range(1, steps + 1):
+            t0 = time.perf_counter()
+            if instrumented:
+                # the per-step call sites of launch/train.py
+                with obs.span("bench/step", step=k):
+                    state, m = step(state, batches[k])
+                    jax.block_until_ready(state)
+                if obs.enabled():
+                    scal = {k2: float(v) for k2, v in m.items()}
+                    obs.event("train/step", step=k, **scal)
+                    obs.histogram("train/loss").observe(scal["loss"])
+                    obs.counter("train/wire_bytes").inc(
+                        scal.get("wire_bytes", 0.0))
+                    obs.gauge("train/pad_eff").set(1.0)
+            else:
+                state, m = step(state, batches[k])
+                jax.block_until_ready(state)
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+    obs.reset()
+    plain = run(False)
+    noop = run(True)                    # no-op default: null span + guard
+    obs.configure()
+    live = run(True)                    # live registry + flight recorder
+    obs.reset()
+    return [
+        ("obs/step_ms_plain", plain * 1e3,
+         "median blocked train step, no instrumentation"),
+        ("obs/step_ms_noop", noop * 1e3,
+         "instrumentation sites against the disabled no-op default"),
+        ("obs/step_ms_live", live * 1e3,
+         "live registry + flight-recorder emission per step"),
+        ("obs/step_overhead_ratio", live / plain,
+         "live/plain (acceptance: <= 1.03)"),
+        ("obs/noop_overhead_ratio", noop / plain,
+         "noop/plain — the zero-overhead-default contract"),
+    ]
+
+
 def main(argv=None) -> None:
     import json
 
-    from repro.serving.slo import print_csv_rows
+    from repro.obs import print_csv_rows
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
@@ -801,7 +888,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     wanted = [w for w in args.only.split(",") if w]
 
-    # the shared name,value,derived schema (repro.serving.slo)
+    # the shared name,value,derived schema (repro.obs)
     print_csv_rows([], header=True)
     failures = 0
     collected = []

@@ -287,11 +287,27 @@ def _learner_dim(params) -> int:
     return jax.tree.leaves(params)[0].shape[0]
 
 
+def _grad_norm(g):
+    """Global L2 norm of a gradient tree (f32 accumulation)."""
+    sq = sum(jnp.sum(jnp.square(w.astype(jnp.float32)))
+             for w in jax.tree.leaves(g))
+    return jnp.sqrt(sq)
+
+
+def _grad_norm_stacked(g_l):
+    """(L,) per-learner L2 norms of a stacked gradient tree."""
+    sq = sum(jnp.sum(jnp.square(w.astype(jnp.float32)),
+                     axis=tuple(range(1, w.ndim)))
+             for w in jax.tree.leaves(g_l))
+    return jnp.sqrt(sq)
+
+
 def make_train_step(strategy: Strategy, loss_fn: Callable,
                     optimizer: Optimizer, lr_schedule: Callable,
                     *, n_learners: int = 1, microbatches: int = 1,
                     with_consensus: bool = False, pre_split: bool = False,
-                    transport: Optional[Transport] = None):
+                    transport: Optional[Transport] = None,
+                    with_grad_norm: bool = False):
     """Build the jittable train step.
 
     loss_fn(params, batch) -> scalar, over UNstacked params/batch.
@@ -313,6 +329,12 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
     step (0 on non-sync BMUF steps).  Non-replicated sc_psgd averages
     gradients through GSPMD, not the substrate, so it carries no
     wire-byte telemetry (see docs/strategies.md).
+
+    ``with_grad_norm`` adds ``metrics['grad_norm']`` — the L2 norm of
+    the applied gradient (mean of the per-learner norms on replicated
+    strategies).  Off by default: the extra reduction changes the jit
+    graph, and the observability layer's zero-overhead contract is
+    that uninstrumented runs stay bit-identical.
     """
     transport = transport if transport is not None \
         else default_transport(strategy)
@@ -336,6 +358,8 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
             out = {"params": new_params, "opt": opt,
                    "step": state["step"] + 1}
             metrics["loss"] = loss
+            if with_grad_norm:
+                metrics["grad_norm"] = _grad_norm(g)
             return out, metrics
 
         lbatch = batch if pre_split else split_learner_batch(batch, n_learners)
@@ -358,6 +382,8 @@ def make_train_step(strategy: Strategy, loss_fn: Callable,
                                / jnp.maximum(jnp.sum(frames), 1e-6))
         else:
             metrics["loss"] = jnp.mean(loss_l)
+        if with_grad_norm:
+            metrics["grad_norm"] = jnp.mean(_grad_norm_stacked(g_l))
 
         comm = state.get("comm", {})
         wire_bytes = jnp.float32(transport.wire_bytes(state["params"]))
@@ -485,7 +511,8 @@ def make_elastic_train_step(strategy: Strategy, loss_fn: Callable,
                             pre_split: bool = False,
                             transport: Optional[Transport] = None,
                             fault_seed: int = 0,
-                            with_corruption: bool = False):
+                            with_corruption: bool = False,
+                            with_grad_norm: bool = False):
     """Build the fault-tolerant variant of :func:`make_train_step`:
 
         ``step(state, batch, faults) -> (state', metrics)``
@@ -576,6 +603,11 @@ def make_elastic_train_step(strategy: Strategy, loss_fn: Callable,
                        * w.reshape((-1,) + (1,) * (g.ndim - 1))
                        ).astype(g.dtype), g_l)
         metrics["loss"] = jnp.sum(loss_l * cframes) / csum
+        if with_grad_norm:
+            # mean applied-gradient norm over the contributors
+            norms = _grad_norm_stacked(g_l)
+            metrics["grad_norm"] = (jnp.sum(norms * gmask)
+                                    / jnp.maximum(jnp.sum(gmask), 1.0))
 
         wire_bytes = (jnp.float32(transport.wire_bytes(params))
                       * n_act / n_learners)

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import decode as DC
+from repro import obs
 from repro.checkpoint import restore
 from repro.configs import get_arch
 from repro.core import strategies as ST
@@ -121,10 +122,14 @@ def evaluate_params(cfg, params, *, batches: int = 4, batch: int = 8,
             fwd(params, jnp.asarray(b["features"]),
                 None if lengths is None else lens_j))
         dt_fwd = time.perf_counter() - t0
-        t0 = time.perf_counter()
+        t1 = time.perf_counter()
         toks, lens, occ = jax.tree.map(
             jax.block_until_ready, decode_batch(logits, lens_j))
-        dt_dec = time.perf_counter() - t0
+        dt_dec = time.perf_counter() - t1
+        obs.add_span("eval/fwd", t0, dt_fwd, wall=True)
+        obs.add_span("eval/decode", t1, dt_dec, wall=True)
+        obs.histogram("eval/fwd_s", wall=True).observe(dt_fwd)
+        obs.histogram("eval/decode_s", wall=True).observe(dt_dec)
         return logits, lengths, toks, lens, occ, dt_fwd, dt_dec
 
     # warm-up compile on every distinct padded shape (bucketed batches
@@ -221,8 +226,18 @@ def main(argv=None):
     ap.add_argument("--blank", type=int, default=0,
                     help="blank/silence class id of the TER convention")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="enable observability and write the run's "
+                         "flight-recorder JSONL here (per-batch "
+                         "forward/decode timing spans; "
+                         "docs/observability.md)")
+    ap.add_argument("--trace-deterministic", action="store_true",
+                    help="strip wall-clock fields from the JSONL so "
+                         "two seeded runs emit byte-identical traces")
     args = ap.parse_args(argv)
 
+    if args.trace_out:
+        obs.configure()
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -255,7 +270,7 @@ def main(argv=None):
         seed=args.seed, kernel_impl=args.kernel_impl,
         blank=args.blank, decode_chunk=args.decode_chunk)
 
-    from repro.serving.slo import print_csv_rows
+    from repro.obs import print_csv_rows
 
     tag = f"evaluate/{strategy.name}"
     rows = [
@@ -271,8 +286,13 @@ def main(argv=None):
         (f"{tag}/beam_occupancy", m["beam_occupancy"],
          "live beam slots / beam width"),
     ]
-    # the shared name,value,derived schema (repro.serving.slo)
+    # the shared name,value,derived schema (repro.obs)
     print_csv_rows(rows, header=True)
+    if args.trace_out:
+        n = obs.dump(args.trace_out,
+                     deterministic=args.trace_deterministic)
+        print(f"trace: {n} events -> {args.trace_out}")
+        obs.reset()
 
 
 if __name__ == "__main__":

@@ -20,11 +20,62 @@ from __future__ import annotations
 
 import argparse
 import sys
+import time
 
+from repro import obs
 from repro.configs import get_arch
 from repro.serving import (CostModel, ServingLoop, VirtualClock, WallClock,
                            Workload, generate_trace, make_payload,
                            print_csv_rows, prompt_capacity, summary_rows)
+from repro.serving.admission import OK
+
+
+def instrument_server(server):
+    """Wrap ``submit``/``step_wave`` with wall-time measurement: each
+    admission's and wave's real service time lands in ``wall``
+    histograms and in the returned observation lists, which
+    :func:`repro.obs.fit_cost_model` turns into calibrated
+    ``CostModel`` parameters (the ROADMAP "calibrate CostModel from
+    --wall runs" loop)."""
+    admit_obs, wave_obs = [], []
+    orig_submit, orig_wave = server.submit, server.step_wave
+
+    def submit(req, payload):
+        t0 = time.perf_counter()
+        res = orig_submit(req, payload)
+        dt = time.perf_counter() - t0
+        if res.reason == OK:
+            admit_obs.append(dt)
+            obs.histogram("load/admit_s", wall=True).observe(dt)
+        return res
+
+    def step_wave():
+        t0 = time.perf_counter()
+        out = orig_wave()
+        dt = time.perf_counter() - t0
+        wave_obs.append((out[2], dt))       # (work, measured seconds)
+        obs.histogram("load/wave_s", wall=True).observe(dt)
+        return out
+
+    server.submit, server.step_wave = submit, step_wave
+    return admit_obs, wave_obs
+
+
+def calibration_rows(fit: dict):
+    """CostModel calibration as shared-schema CSV rows — the values
+    paste straight back into ``--admit-ms`` / ``--wave-ms`` /
+    ``--work-us`` for a calibrated virtual-time run."""
+    return [
+        ("calib/admit_ms", fit["admit_s"] * 1e3,
+         "measured mean admission service time (feed to --admit-ms)"),
+        ("calib/wave_ms", fit["wave_base_s"] * 1e3,
+         "fit intercept: base cost per wave (feed to --wave-ms)"),
+        ("calib/work_us", fit["per_work_s"] * 1e6,
+         "fit slope: per token/frame (feed to --work-us)"),
+        ("calib/n_waves", fit["n_waves"], "measured decode waves"),
+        ("calib/resid_ms", fit["resid_s"] * 1e3,
+         "rms residual of the wave-time fit"),
+    ]
 
 
 def build_server(cfg, args):
@@ -143,12 +194,32 @@ def main(argv=None):
     ap.add_argument("--events", action="store_true",
                     help="print the structured per-request event stream "
                          "(offer/done with timestamps)")
+    ap.add_argument("--trace-out", default="",
+                    help="enable observability and write the run's "
+                         "flight-recorder JSONL here (request events, "
+                         "measured service times, calibration inputs; "
+                         "docs/observability.md)")
+    ap.add_argument("--trace-deterministic", action="store_true",
+                    help="strip wall-clock fields from the JSONL so "
+                         "two seeded runs emit byte-identical traces")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure real submit/step_wave service times "
+                         "and print calib/* rows: a least-squares "
+                         "CostModel fit whose values feed back into "
+                         "--admit-ms/--wave-ms/--work-us (implied by "
+                         "--wall)")
     args = ap.parse_args(argv)
 
+    if args.trace_out:
+        obs.configure()
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     server, mode = build_server(cfg, args)
+    calibrate = args.wall or args.calibrate
+    admit_obs = wave_obs = None
+    if calibrate:
+        admit_obs, wave_obs = instrument_server(server)
     workload = build_workload(args, mode)
     trace = generate_trace(workload)
     print(f"[load] {mode} x {args.kernel_impl}: {len(trace)} offered "
@@ -180,7 +251,14 @@ def main(argv=None):
             ("load/waves", loop.n_waves, "decode waves"),
             ("load/elapsed_s", loop.clock.now(), derived)]
     rows += summary_rows(summary, "load", derived)
+    if calibrate:
+        rows += calibration_rows(obs.fit_cost_model(wave_obs, admit_obs))
     print_csv_rows(rows, header=True)
+    if args.trace_out:
+        n = obs.dump(args.trace_out,
+                     deterministic=args.trace_deterministic)
+        print(f"trace: {n} events -> {args.trace_out}")
+        obs.reset()
 
     if args.min_done_per_tier > 0:
         short = {t: tv["done"] for t, tv in summary["per_tier"].items()

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import decode as DC
+from repro import obs
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.launch.mesh import make_local_mesh, rules_for
@@ -57,6 +58,23 @@ from repro.serving.admission import (NO_BUDGET, OK, POOL_FULL,
                                      prompt_capacity)
 from repro.serving.kvpool import PagePool, cdiv
 from repro.sharding import ParamSpec, init_spec_tree
+
+
+def _profile_jits(server, names):
+    """Wrap the server's jitted entry points in compile/steady
+    :class:`~repro.obs.ProfiledFn` wall-time wrappers (only while
+    observability is on — the wrapper blocks on results, which the
+    uninstrumented hot path must not pay)."""
+    server._profiled = []
+    if not obs.enabled():
+        return
+    for attr in names:
+        p = obs.profiled(getattr(server, attr),
+                         f"serve/{attr.removeprefix('_jit_')}",
+                         metrics=obs.get_metrics(),
+                         recorder=obs.get_recorder())
+        setattr(server, attr, p)
+        server._profiled.append(p)
 
 
 def zeros_from_specs(spec_tree):
@@ -99,6 +117,7 @@ class _SlotPool:
 
     def _event(self, kind: str, rid: int, **kw):
         self.events.append((kind, rid, kw))
+        obs.event(f"serve/{kind}", rid=rid, **kw)
         if self.verbose:
             extra = "".join(f" {k}={v}" for k, v in kw.items())
             print(f"[req] {kind} rid={rid}{extra}", flush=True)
@@ -157,6 +176,16 @@ class Server(_SlotPool):
             self._select = lambda row: int(DC.argmax_tokens(row[None])[0])
         else:
             self._select = lambda row: int(jnp.argmax(row))
+        _profile_jits(self, ("_jit_prefill", "_jit_decode"))
+        if obs.enabled() and cfg.family in ("dense", "moe", "vlm"):
+            # runtime collection of the kernel's VMEM accounting
+            # single-source (repro.kernels.decode_attention)
+            from repro.kernels.decode_attention import (
+                auto_block_s_decode, decode_attn_vmem_bytes)
+            M, E = cfg.n_heads, cfg.head_dim
+            bs = auto_block_s_decode(max_len, M, E)
+            obs.gauge("kernel/decode_attn_vmem_bytes",
+                      block_s=bs).set(decode_attn_vmem_bytes(bs, M, E))
 
     # ------------------------------------------------------------------
     def admit(self, req_id: int, prompt: np.ndarray,
@@ -378,10 +407,19 @@ class PagedServer:
             self._select = lambda row: int(DC.argmax_tokens(row[None])[0])
         else:
             self._select = lambda row: int(jnp.argmax(row))
+        _profile_jits(self, ("_jit_prefill", "_jit_decode",
+                             "_jit_write", "_jit_copy_page"))
+        if obs.enabled():
+            from repro.kernels.decode_attention import paged_attn_vmem_bytes
+            M, E = cfg.n_heads, cfg.head_dim
+            obs.gauge("kernel/paged_attn_vmem_bytes",
+                      page_size=page_size).set(
+                paged_attn_vmem_bytes(page_size, M, E, self.table_w))
 
     # ------------------------------------------------------------------
     def _event(self, kind: str, rid: int, **kw):
         self.events.append((kind, rid, kw))
+        obs.event(f"serve/{kind}", rid=rid, **kw)
         if self.verbose:
             extra = "".join(f" {k}={v}" for k, v in kw.items())
             print(f"[req] {kind} rid={rid}{extra}", flush=True)
@@ -625,6 +663,11 @@ class AsrServer(_SlotPool):
             lambda st: DC.finalize(st, len_norm=self.len_norm,
                                    semiring=self.semiring))
         self._jit_occ = jax.jit(DC.beam_occupancy)
+        _profile_jits(self, ("_jit_fwd", "_jit_decode", "_jit_finalize"))
+        if obs.enabled():
+            obs.gauge("kernel/beam_cand_bytes", beam=self.beam,
+                      topc=self.topc).set(
+                DC.beam_cand_bytes(self.beam, cfg.vocab, self.topc))
 
     def admit(self, req_id: int, feats: np.ndarray) -> AdmitResult:
         """Typed admission: ``pool_full`` (retryable), ``prompt_too_long``
@@ -748,6 +791,22 @@ class AsrServer(_SlotPool):
         return done, occ
 
 
+def _finish_trace(server, args):
+    """End-of-run observability: per-entry-point compile/steady rows
+    (the regimes a single wall-clock total conflates) and the JSONL
+    flight-recorder dump."""
+    for p in getattr(server, "_profiled", []):
+        n = p.n_calls - p.n_compiles
+        print(f"timing: {p.name} compile {p.compile_s:.2f}s "
+              f"({p.n_compiles} compile(s)), steady {p.steady_s:.3f}s "
+              f"over {n} calls", flush=True)
+    if args.trace_out:
+        n = obs.dump(args.trace_out,
+                     deterministic=args.trace_deterministic)
+        print(f"trace: {n} events -> {args.trace_out}")
+        obs.reset()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -799,8 +858,18 @@ def main(argv=None):
                          "beam candidate grid (0 = off, -1 = cfg "
                          "beam_topc); exact when C covers the frame "
                          "support (docs/decoding.md)")
+    ap.add_argument("--trace-out", default="",
+                    help="enable observability and write the run's "
+                         "flight-recorder JSONL here (per-request "
+                         "events, compile/steady kernel timings, VMEM "
+                         "accounting gauges; docs/observability.md)")
+    ap.add_argument("--trace-deterministic", action="store_true",
+                    help="strip wall-clock fields from the JSONL so "
+                         "two seeded runs emit byte-identical traces")
     args = ap.parse_args(argv)
 
+    if args.trace_out:
+        obs.configure()
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -837,7 +906,8 @@ def main(argv=None):
             # stream carries the per-request outcome either way)
         occ += (server.occupancy() if cache_mode == "paged"
                 else server.active.mean())
-        finished += server.step()
+        with obs.span("serve/wave", wave=steps):
+            finished += server.step()
         steps += 1
     dt = time.time() - t0
     toks = sum(len(o) for _, o in finished)
@@ -855,6 +925,7 @@ def main(argv=None):
               f"shared_hits={server.pool.n_shared_hits}")
     for rid, out in finished:
         print(f"  req {rid}: {out[:8]}{'...' if len(out) > 8 else ''}")
+    _finish_trace(server, args)
 
 
 def _main_asr(cfg, args):
@@ -881,7 +952,8 @@ def _main_asr(cfg, args):
             if res.reason == POOL_FULL:
                 break
             pending.pop(0)
-        done, wave_occ = server.step()
+        with obs.span("serve/wave", wave=steps):
+            done, wave_occ = server.step()
         finished += done
         occ += wave_occ
         steps += 1
@@ -893,6 +965,7 @@ def _main_asr(cfg, args):
           f"occupancy {occ/max(steps, 1):.2f})")
     for rid, out in finished:
         print(f"  req {rid}: {out[:8]}{'...' if len(out) > 8 else ''}")
+    _finish_trace(server, args)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import restore, save
 from repro.configs import get_arch
 from repro.core import strategies as ST
@@ -42,7 +43,8 @@ def setup_training(cfg, mesh, *, strategy_name: str = None,
                    with_consensus: bool = False, kernel_impl: str = "jax",
                    microbatches: int = None, transport=None,
                    elastic: bool = False, fault_seed: int = 0,
-                   with_corruption: bool = False):
+                   with_corruption: bool = False,
+                   with_grad_norm: bool = False):
     """Build sharded train state + jitted step for one arch on one mesh.
 
     ``transport`` overrides the communication substrate (topology × wire
@@ -77,12 +79,14 @@ def setup_training(cfg, mesh, *, strategy_name: str = None,
             strategy, loss_fn, opt, lr_schedule,
             n_learners=n_learners, microbatches=microbatches,
             with_consensus=with_consensus, transport=transport,
-            fault_seed=fault_seed, with_corruption=with_corruption)
+            fault_seed=fault_seed, with_corruption=with_corruption,
+            with_grad_norm=with_grad_norm)
     else:
         step_fn = ST.make_train_step(
             strategy, loss_fn, opt, lr_schedule,
             n_learners=n_learners, microbatches=microbatches,
-            with_consensus=with_consensus, transport=transport)
+            with_consensus=with_consensus, transport=transport,
+            with_grad_norm=with_grad_norm)
 
     pspecs = model.param_specs()
     lead = ((n_learners, "learner"),) if strategy.replicated else ()
@@ -214,7 +218,19 @@ def main(argv=None):
                          "batch pads to its own rounded max length; "
                          "distinct padded lengths each compile once")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="enable observability and write the run's "
+                         "flight-recorder JSONL here (schema in "
+                         "docs/observability.md; render with "
+                         "repro.launch.obsreport); also records "
+                         "per-step grad-norm")
+    ap.add_argument("--trace-deterministic", action="store_true",
+                    help="strip wall-clock fields from the JSONL so "
+                         "two seeded runs emit byte-identical traces")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        obs.configure()
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -284,7 +300,8 @@ def main(argv=None):
         lr_schedule=paper_recipe(steps_per_epoch=max(args.steps // 16, 1),
                                  base_lr=0.05, peak_lr=0.2),
         elastic=elastic, fault_seed=args.fault_seed,
-        with_corruption=args.fault_corrupt_prob > 0)
+        with_corruption=args.fault_corrupt_prob > 0,
+        with_grad_norm=obs.enabled())
 
     if args.resume and not args.ckpt_dir:
         raise SystemExit("--resume needs --ckpt-dir")
@@ -298,16 +315,39 @@ def main(argv=None):
                 raise SystemExit(
                     f"--resume: no checkpoint under {args.ckpt_dir}")
 
+    if obs.enabled() and cfg.family == "lstm":
+        # runtime collection of the BLSTM residual-stash HBM accounting
+        # single-source (repro.kernels.lstm_cell.stash_bytes)
+        from repro.kernels.lstm_cell import stash_bytes
+        obs.gauge("kernel/stash_bytes", impl=args.kernel_impl).set(
+            stash_bytes(max(batch // max(n_learners, 1), 1), seq_len,
+                        cfg.d_model, n_dir=2,
+                        stash_itemsize=(2 if cfg.lstm_stash_dtype
+                                        == "bfloat16" else 4),
+                        seq_chunk=max(cfg.lstm_seq_chunk, 0)))
+
     ds = make_dataset(cfg, seq_len=seq_len, batch=batch, seed=args.seed,
                       var_len=args.var_len or args.bucket,
                       bucket=args.bucket)
     pf = Prefetcher(ds, start_step=start)
+
+    # compile/steady wall-time split per jit entry point: a new BATCH
+    # shape (bucketed batching pads to distinct lengths) means an XLA
+    # retrace, so key on the batch arg's array shapes (args[1])
+    def _batch_key(a, kw):
+        return tuple(sorted((k2, tuple(v.shape))
+                            for k2, v in a[1].items()))
+
+    prof = obs.ProfiledFn(jit_step, "train/step", key=_batch_key,
+                          metrics=obs.get_metrics(),
+                          recorder=obs.get_recorder())
     t0 = time.time()
     valid_frames = padded_frames = 0
     metrics = None
     with use_mesh(meta["mesh"]):
         for k in range(start, args.steps):
-            batch_np = pf.next()
+            with obs.span("train/fetch", step=k):
+                batch_np = pf.next()
             if "lengths" in batch_np:
                 valid_frames += int(batch_np["lengths"].sum())
                 padded_frames += (batch_np["features"].shape[0]
@@ -315,9 +355,27 @@ def main(argv=None):
             if plan is not None:
                 faults = plan.step_inputs(k)
                 ST.check_active(faults["active"])
-                state, metrics = jit_step(state, batch_np, faults)
+                state, metrics = prof(state, batch_np, faults)
             else:
-                state, metrics = jit_step(state, batch_np)
+                state, metrics = prof(state, batch_np)
+            if obs.enabled():
+                scal = {k2: float(v) for k2, v in metrics.items()}
+                obs.event("train/step", step=k, **scal)
+                obs.histogram("train/loss").observe(scal["loss"])
+                if "grad_norm" in scal:
+                    obs.histogram("train/grad_norm").observe(
+                        scal["grad_norm"])
+                if "wire_bytes" in scal:
+                    obs.counter("train/wire_bytes",
+                                strategy=meta["strategy"].name
+                                ).inc(scal["wire_bytes"])
+                if "n_active" in scal:
+                    obs.gauge("train/n_active").set(scal["n_active"])
+                    obs.histogram("train/staleness_max").observe(
+                        scal["staleness_max"])
+                if padded_frames:
+                    obs.gauge("train/pad_eff").set(
+                        valid_frames / padded_frames)
             if k % args.log_every == 0:
                 loss = float(metrics["loss"])
                 line = (f"step {k:5d} loss {loss:.4f} "
@@ -345,8 +403,22 @@ def main(argv=None):
     if metrics is not None:
         # one parseable line for kill-and-resume / fault-smoke comparisons
         print(f"final loss {float(metrics['loss']):.6f}")
+    # compile (first call per batch shape: trace + XLA compile) and
+    # steady-state step time are different regimes — report both
+    # instead of one conflated total (ProfiledFn split)
+    n_steady = prof.n_calls - prof.n_compiles
     print(f"done: {args.steps - start} steps in {time.time()-t0:.1f}s "
           f"[{meta['strategy'].name}, L={meta['n_learners']}]")
+    print(f"timing: compile {prof.compile_s:.1f}s "
+          f"({prof.n_compiles} compile(s)), steady {prof.steady_s:.1f}s "
+          f"over {n_steady} steps"
+          + (f" ({1e3 * prof.steady_mean_s:.1f} ms/step)" if n_steady
+             else ""), flush=True)
+    if args.trace_out:
+        n = obs.dump(args.trace_out,
+                     deterministic=args.trace_deterministic)
+        print(f"trace: {n} events -> {args.trace_out}")
+        obs.reset()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,162 @@
+"""Profiling hooks: compile-vs-steady wall-time wrappers for jitted
+entry points, and the CostModel calibration fit fed by them.
+
+``jax.jit`` hides a bimodal cost: the first call per input shape traces
+and compiles (seconds), every later call just dispatches (micro- to
+milliseconds).  A single ``N steps in Xs`` line therefore conflates two
+regimes the paper's §IV cost accounting keeps separate.
+:class:`ProfiledFn` wraps a jitted callable, blocks on the result
+(``jax.block_until_ready``) and classifies each call:
+
+* **compile** — first call for a given *shape key* (by default the
+  shapes/dtypes of array arguments; bucketed batching thus counts one
+  compile per bucket, matching XLA's retrace behaviour),
+* **steady** — every subsequent call with a known key.
+
+Timings land in the process metrics registry as ``wall=True``
+histograms tagged ``fn=<name> phase=compile|steady`` and, optionally,
+as flight-recorder spans — so ``launch/obsreport.py`` renders the
+split and the deterministic JSONL export can drop them.
+
+:func:`fit_cost_model` closes the ROADMAP loop "calibrate CostModel
+from ``--wall`` runs": a least-squares line through measured
+(work, wave seconds) pairs gives ``per_work_s``/``wave_base_s``, and
+mean admit time gives ``admit_s`` — printable as CSV and pastable back
+into ``launch/load.py`` flags.
+"""
+from __future__ import annotations
+
+import time
+
+from .metrics import NULL_METRICS
+from .trace import NULL_RECORDER
+
+try:  # array-result blocking; obs must import without jax (obsreport)
+    import jax
+
+    def _block(x):
+        return jax.block_until_ready(x)
+except Exception:  # pragma: no cover - exercised only without jax
+    def _block(x):
+        return x
+
+
+def _shape_key(args, kwargs):
+    """Default shape key: the (shape, dtype) of every array-like
+    argument — a new batch shape means XLA retraces, so the call is a
+    compile."""
+    parts = []
+    for a in list(args) + [kwargs[k] for k in sorted(kwargs)]:
+        shape = getattr(a, "shape", None)
+        if shape is not None:
+            parts.append((tuple(shape), str(getattr(a, "dtype", ""))))
+    return tuple(parts)
+
+
+class ProfiledFn:
+    """Wall-time wrapper separating first-call (compile) from
+    steady-state time per jitted entry point.
+
+    >>> step = ProfiledFn(jitted_step, "train/step")
+    >>> out = step(state, batch)        # blocked; timed as compile
+    >>> out = step(state, batch)        # timed as steady
+    >>> step.compile_s, step.steady_s, step.n_compiles
+    """
+
+    def __init__(self, fn, name: str, *, metrics=None, recorder=None,
+                 key=None, block=True):
+        self.fn = fn
+        self.name = name
+        self.metrics = NULL_METRICS if metrics is None else metrics
+        self.recorder = NULL_RECORDER if recorder is None else recorder
+        self._key = _shape_key if key is None else key
+        self._block = block
+        self._seen: set = set()
+        self.n_calls = 0
+        self.n_compiles = 0
+        self.compile_s = 0.0
+        self.steady_s = 0.0
+
+    def __call__(self, *args, **kwargs):
+        k = self._key(args, kwargs)
+        compile_call = k not in self._seen
+        t0 = time.perf_counter()
+        out = self.fn(*args, **kwargs)
+        if self._block:
+            out = _block(out)
+        dt = time.perf_counter() - t0
+        self._seen.add(k)
+        self.n_calls += 1
+        phase = "compile" if compile_call else "steady"
+        if compile_call:
+            self.n_compiles += 1
+            self.compile_s += dt
+        else:
+            self.steady_s += dt
+        self.metrics.histogram("profile/call_s", wall=True,
+                               fn=self.name, phase=phase).observe(dt)
+        self.recorder.add_span(self.name, t0, dt, phase=phase, wall=True)
+        return out
+
+    @property
+    def steady_mean_s(self) -> float:
+        n = self.n_calls - self.n_compiles
+        return self.steady_s / n if n else float("nan")
+
+    def summary(self) -> dict:
+        return {"fn": self.name, "n_calls": self.n_calls,
+                "n_compiles": self.n_compiles,
+                "compile_s": self.compile_s, "steady_s": self.steady_s,
+                "steady_mean_s": self.steady_mean_s}
+
+
+def profiled(fn, name: str, **kw) -> ProfiledFn:
+    """Wrap ``fn`` unless it already is a :class:`ProfiledFn`."""
+    if isinstance(fn, ProfiledFn):
+        return fn
+    return ProfiledFn(fn, name, **kw)
+
+
+# ---------------------------------------------------------------------------
+# CostModel calibration from measured service times
+# ---------------------------------------------------------------------------
+
+def fit_cost_model(wave_obs, admit_obs=()) -> dict:
+    """Least-squares CostModel parameters from ``--wall`` measurements.
+
+    ``wave_obs`` — iterable of ``(work, seconds)`` pairs, one per
+    measured ``step_wave`` (work = active decode slots, the CostModel's
+    unit); ``admit_obs`` — measured per-admission seconds.  Returns a
+    plain dict (NOT a CostModel — keeps obs import-free of serving)::
+
+        {"wave_base_s", "per_work_s", "admit_s", "n_waves", "resid_s"}
+
+    With a single distinct work level the slope is unidentifiable; we
+    pin ``per_work_s = 0`` and fit the intercept alone.
+    """
+    pairs = [(float(w), float(s)) for w, s in wave_obs]
+    n = len(pairs)
+    if n == 0:
+        return {"wave_base_s": float("nan"), "per_work_s": float("nan"),
+                "admit_s": _mean(admit_obs), "n_waves": 0,
+                "resid_s": float("nan")}
+    xs = [w for w, _ in pairs]
+    ys = [s for _, s in pairs]
+    mx = sum(xs) / n
+    my = sum(ys) / n
+    sxx = sum((x - mx) ** 2 for x in xs)
+    if sxx > 0.0:
+        slope = sum((x - mx) * (y - my) for x, y in pairs) / sxx
+        slope = max(slope, 0.0)  # negative per-work cost is noise
+    else:
+        slope = 0.0
+    base = max(my - slope * mx, 0.0)
+    resid = (sum((y - (base + slope * x)) ** 2
+                 for x, y in pairs) / n) ** 0.5
+    return {"wave_base_s": base, "per_work_s": slope,
+            "admit_s": _mean(admit_obs), "n_waves": n, "resid_s": resid}
+
+
+def _mean(vals) -> float:
+    vals = [float(v) for v in vals]
+    return sum(vals) / len(vals) if vals else float("nan")

@@ -10,10 +10,18 @@ Every serving-side surface reports through the same two primitives:
   loop's clock says — *virtual* seconds in tests/benches, wall seconds
   in ``--wall`` mode — so the same accounting code covers both.
 * ``name,value,derived`` CSV rows — the schema ``benchmarks/run.py``
-  and ``launch/evaluate.py`` already print; :func:`csv_row` /
-  :func:`print_csv_rows` are now the single formatting source so the
-  capacity report, the evaluate table and every bench emit identical
-  shapes (docs/serving.md §Report schema).
+  and ``launch/evaluate.py`` already print; the formatting source now
+  lives in :mod:`repro.obs` (:func:`repro.obs.csv_row` /
+  :func:`repro.obs.print_csv_rows`); this module re-exports them as
+  deprecation shims (docs/serving.md §Report schema).
+
+The :class:`Recorder` is a *view* over the shared observability event
+schema (docs/observability.md): every stamping method emits a
+``request/*`` event through ``repro.obs`` (a no-op unless a launcher
+enabled tracing) and applies it to the live table via the same
+:func:`_apply` fold that :func:`fold_request_events` uses to rebuild a
+table from a recorded JSONL — so the flight recorder and the in-memory
+table can never disagree (property-tested in tests/test_obs.py).
 
 SLO definitions (docs/serving.md §SLOs):
 
@@ -29,6 +37,11 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+
+from repro import obs
+from repro.obs import CSV_HEADER, csv_row, print_csv_rows  # noqa: F401
+# ^ moved to repro.obs (single formatting source); re-exported here as
+#   deprecation shims for existing importers.
 
 NAN = float("nan")
 
@@ -63,49 +76,98 @@ class RequestEvents:
         return self.t_done - self.arrival
 
 
-class Recorder:
-    """The per-request event table; stamped by the admission controller
-    and the serving loop, summarized by :func:`summarize`."""
+def _apply(rec: "Recorder", name: str, attrs: dict) -> None:
+    """Fold one ``request/*`` schema event into a recorder's table.
+    The single transition function shared by the live :class:`Recorder`
+    (stamping methods route through it) and the offline
+    :func:`fold_request_events` rebuild — unknown rids raise KeyError,
+    matching the historical stamping semantics."""
+    a = attrs
+    table = rec.events
+    if name == "request/offered":
+        table[a["rid"]] = RequestEvents(
+            a["rid"], a["tier"], a["arrival"],
+            deadline=a.get("deadline", math.inf))
+    elif name == "request/admitted":
+        ev = table[a["rid"]]
+        if math.isnan(ev.t_admit):          # first admission only
+            ev.t_admit = a["now"]
+        ev.outcome = "running"
+    elif name == "request/first_token":
+        ev = table[a["rid"]]
+        if math.isnan(ev.t_first):
+            ev.t_first = a["now"]
+    elif name == "request/preempted":
+        table[a["rid"]].n_preempt += 1
+        rec.n_preemptions += 1
+    elif name == "request/done":
+        ev = table[a["rid"]]
+        ev.t_done = a["now"]
+        ev.n_tokens = a.get("n_tokens", 0)
+        ev.outcome = "done"
+    elif name == "request/abandoned":
+        ev = table[a["rid"]]
+        ev.t_done = a["now"]
+        ev.outcome = "abandoned"
+    elif name == "request/rejected":
+        ev = table[a["rid"]]
+        ev.t_done = a["now"]
+        ev.outcome = "rejected"
+        ev.reject_reason = a["reason"]
+    else:
+        raise ValueError(f"unknown request event {name!r}")
 
-    def __init__(self):
+
+class Recorder:
+    """The per-request event table: a live view over the shared
+    ``request/*`` event schema.  Each stamping method tees the event to
+    ``repro.obs`` (free while tracing is off) and folds it into the
+    table via :func:`_apply`; summarized by :func:`summarize`."""
+
+    def __init__(self, emit: bool = True):
         self.events: dict[int, RequestEvents] = {}
         self.n_preemptions = 0
+        self._emit = emit
+
+    def _stamp(self, name, **attrs):
+        if self._emit:
+            obs.event(name, **attrs)
+        _apply(self, name, attrs)
 
     def offered(self, rid, tier, arrival, deadline=math.inf):
-        self.events[rid] = RequestEvents(rid, tier, arrival,
-                                         deadline=deadline)
+        self._stamp("request/offered", rid=rid, tier=tier,
+                    arrival=arrival, deadline=deadline)
 
     def admitted(self, rid, now):
-        ev = self.events[rid]
-        if math.isnan(ev.t_admit):          # first admission only
-            ev.t_admit = now
-        ev.outcome = "running"
+        self._stamp("request/admitted", rid=rid, now=now)
 
     def first_token(self, rid, now):
-        ev = self.events[rid]
-        if math.isnan(ev.t_first):
-            ev.t_first = now
+        self._stamp("request/first_token", rid=rid, now=now)
 
     def preempted(self, rid):
-        self.events[rid].n_preempt += 1
-        self.n_preemptions += 1
+        self._stamp("request/preempted", rid=rid)
 
     def done(self, rid, now, n_tokens=0):
-        ev = self.events[rid]
-        ev.t_done = now
-        ev.n_tokens = n_tokens
-        ev.outcome = "done"
+        self._stamp("request/done", rid=rid, now=now, n_tokens=n_tokens)
 
     def abandoned(self, rid, now):
-        ev = self.events[rid]
-        ev.t_done = now
-        ev.outcome = "abandoned"
+        self._stamp("request/abandoned", rid=rid, now=now)
 
     def rejected(self, rid, now, reason):
-        ev = self.events[rid]
-        ev.t_done = now
-        ev.outcome = "rejected"
-        ev.reject_reason = reason
+        self._stamp("request/rejected", rid=rid, now=now, reason=reason)
+
+
+def fold_request_events(events) -> Recorder:
+    """Rebuild a request table from recorded schema events (the
+    ``request/*`` instants of a JSONL trace).  By construction
+    ``fold(trace).events == live.events`` for the run that emitted the
+    trace — the view-consistency property tests/test_obs.py asserts."""
+    rec = Recorder(emit=False)
+    for ev in events:
+        name = ev.get("name", "")
+        if ev.get("kind") == "event" and name.startswith("request/"):
+            _apply(rec, name, ev.get("attrs", {}))
+    return rec
 
 
 def percentile(values, q: float) -> float:
@@ -182,25 +244,6 @@ def summary_rows(summary: dict, prefix: str, derived: str = ""):
     return rows
 
 
-# ---------------------------------------------------------------------------
-# the shared ``name,value,derived`` stats schema
-# ---------------------------------------------------------------------------
-
-CSV_HEADER = "name,value,derived"
-
-
-def csv_row(name, value, derived="") -> str:
-    """One row of the shared stats schema (evaluate/benchmarks/load)."""
-    try:
-        value = f"{float(value):.6g}"
-    except (TypeError, ValueError):
-        value = str(value)
-    return f"{name},{value},{derived}"
-
-
-def print_csv_rows(rows, header: bool = False) -> None:
-    """Print ``(name, value, derived)`` rows in the shared schema."""
-    if header:
-        print(CSV_HEADER)
-    for name, value, derived in rows:
-        print(csv_row(name, value, derived), flush=True)
+# NOTE: CSV_HEADER / csv_row / print_csv_rows moved to repro.obs (the
+# single formatting source); imported above and re-exported for
+# backward compatibility.

@@ -36,7 +36,8 @@ _FLAG = re.compile(r"add_argument\(\s*\"(--[A-Za-z0-9-]+)\"")
 _EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
 
 FLAG_SOURCES = ("src/repro/launch/train.py", "src/repro/launch/serve.py",
-                "src/repro/launch/evaluate.py", "src/repro/launch/load.py")
+                "src/repro/launch/evaluate.py", "src/repro/launch/load.py",
+                "src/repro/launch/obsreport.py")
 
 
 def iter_markdown(root: Path):
